@@ -1,0 +1,195 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * us_per_call — wall time of evaluating our model/kernel for that entry,
+  * derived     — the reproduced quantity compared against the paper.
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _timed(fn, *args, repeat=3, **kw):
+    fn(*args, **kw)                      # warmup / jit
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / repeat * 1e6, out
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# --- Table II: eFSM latencies & parallelism --------------------------------
+
+def bench_table2():
+    from repro.core.efsm import BRAMAC_1DA, BRAMAC_2SA
+
+    def table():
+        return {v.name: ([v.mac2_latency(b) for b in (2, 4, 8)],
+                         [v.macs_in_parallel(b) for b in (2, 4, 8)])
+                for v in (BRAMAC_2SA, BRAMAC_1DA)}
+
+    us, t = _timed(table)
+    _row("table2_latency_2sa", us, "/".join(map(str, t["BRAMAC-2SA"][0]))
+         + " (paper 5/7/11)")
+    _row("table2_latency_1da", us, "/".join(map(str, t["BRAMAC-1DA"][0]))
+         + " (paper 3/4/6)")
+    _row("table2_parallel_2sa", us, "/".join(map(str, t["BRAMAC-2SA"][1]))
+         + " (paper 80/40/20)")
+
+
+# --- Fig 7: adder study -----------------------------------------------------
+
+def bench_fig7():
+    from repro.core.arch_models import adder_delay_ps
+
+    us, d = _timed(lambda: {k: adder_delay_ps(k, 32)
+                            for k in ("RCA", "CBA", "CLA")})
+    _row("fig7_rca_over_cba", us,
+         f"{d['RCA'] / d['CBA']:.2f}x (paper 2.8x)")
+    _row("fig7_rca_over_cla", us,
+         f"{d['RCA'] / d['CLA']:.2f}x (paper 2.5x)")
+
+
+# --- Fig 9: peak MAC throughput --------------------------------------------
+
+def bench_fig9():
+    from repro.core.arch_models import throughput_boost
+    from repro.core.efsm import BRAMAC_1DA, BRAMAC_2SA
+
+    paper = {("2SA", 2): 2.6, ("2SA", 4): 2.3, ("2SA", 8): 1.9,
+             ("1DA", 2): 2.1, ("1DA", 4): 2.0, ("1DA", 8): 1.7}
+    for variant, tag in ((BRAMAC_2SA, "2SA"), (BRAMAC_1DA, "1DA")):
+        for bits in (2, 4, 8):
+            us, boost = _timed(throughput_boost, bits, variant)
+            _row(f"fig9_boost_{tag}_{bits}bit", us,
+                 f"{boost:.2f}x (paper {paper[(tag, bits)]}x)")
+
+
+# --- Fig 10: utilization efficiency -----------------------------------------
+
+def bench_fig10():
+    from repro.core.arch_models import utilization_advantage
+
+    us, adv = _timed(utilization_advantage)
+    _row("fig10_vs_ccb", us, f"{adv['vs_ccb']:.2f}x (paper 1.3x)")
+    _row("fig10_vs_comefa", us, f"{adv['vs_comefa']:.2f}x (paper 1.1x)")
+
+
+# --- Fig 11: GEMV speedups ---------------------------------------------------
+
+def bench_fig11():
+    from repro.core.gemv_model import max_speedups
+
+    paper = {("persistent", 2): 3.3, ("persistent", 4): 2.8,
+             ("persistent", 8): 2.4, ("nonpersistent", 2): 4.1,
+             ("nonpersistent", 4): 3.4, ("nonpersistent", 8): 2.8}
+    us, ms = _timed(max_speedups)
+    for key, val in ms.items():
+        _row(f"fig11_{key[0]}_{key[1]}bit", us / len(ms),
+             f"{val:.2f}x (paper {paper[key]}x)")
+
+
+# --- Fig 13 / Table III: DLA case study --------------------------------------
+
+def bench_fig13(fast=False):
+    from repro.core.dla_model import average_speedups, case_study
+
+    paper = {("alexnet", "BRAMAC-2SA"): 2.05, ("alexnet", "BRAMAC-1DA"): 1.7,
+             ("resnet34", "BRAMAC-2SA"): 1.33,
+             ("resnet34", "BRAMAC-1DA"): 1.52}
+    t0 = time.perf_counter()
+    avg = average_speedups(case_study())
+    us = (time.perf_counter() - t0) * 1e6
+    for (model, vname), row in avg.items():
+        _row(f"fig13_{model}_{vname}", us / len(avg),
+             f"{row['speedup']:.2f}x speedup / {row['rel_area']:.2f}x area "
+             f"(paper {paper[(model, vname)]}x)")
+
+
+# --- Kernels: BRAMAC matmul & MAC2 (interpret mode on CPU) -------------------
+
+def bench_kernels(fast=False):
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.mac2 import mac2_mvm
+    from repro.core.quant import qrange
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    M = K = N = 64 if fast else 128
+    for bits in (2, 4, 8):
+        lo, hi = qrange(bits)
+        xq = jnp.asarray(rng.integers(lo, hi + 1, (M, K), dtype=np.int8))
+        wq = jnp.asarray(rng.integers(lo, hi + 1, (K, N), dtype=np.int8))
+        one = jnp.ones((1, 1), jnp.float32)
+
+        def run():
+            return ops.quant_matmul(xq, wq, one, one, bits_a=bits,
+                                    bits_w=bits).block_until_ready()
+
+        us, _ = _timed(run)
+        macs = M * K * N
+        _row(f"kernel_bramac_matmul_{bits}bit_{M}cube", us,
+             f"{macs / us:.0f} MMAC/s (interpret mode, "
+             f"{(bits + 1) // 2} digit passes)")
+
+    w = jnp.asarray(rng.integers(-8, 8, (64, 32), dtype=np.int8))
+    x = jnp.asarray(rng.integers(-8, 8, (32,), dtype=np.int8))
+    us, _ = _timed(lambda: mac2_mvm(w, x, bits=4).block_until_ready())
+    _row("kernel_mac2_mvm_alg1_4bit", us, "Algorithm 1 bit-exact MVM")
+
+
+# --- Dry-run roofline summary (reads results if present) --------------------
+
+def bench_roofline():
+    import glob
+    import json
+    import os
+
+    files = sorted(glob.glob("results/dryrun/*__pod.json"))
+    if not files:
+        _row("roofline_table", 0.0, "no dry-run results yet "
+             "(run python -m repro.launch.dryrun)")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        tag = os.path.basename(f).replace("__pod.json", "")
+        if rec.get("status") != "ok":
+            _row(f"roofline_{tag}", 0.0, rec.get("status"))
+            continue
+        r = rec["roofline"]
+        _row(f"roofline_{tag}", rec.get("compile_s", 0) * 1e6,
+             f"dominant={r['dominant']} frac={r['roofline_fraction']:.2f} "
+             f"useful={r['useful_ratio']:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller kernel shapes")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+
+    print("name,us_per_call,derived")
+    benches = {
+        "table2": bench_table2, "fig7": bench_fig7, "fig9": bench_fig9,
+        "fig10": bench_fig10, "fig11": bench_fig11,
+        "fig13": lambda: bench_fig13(args.fast),
+        "kernels": lambda: bench_kernels(args.fast),
+        "roofline": bench_roofline,
+    }
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        fn()
+
+
+if __name__ == "__main__":
+    main()

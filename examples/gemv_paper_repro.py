@@ -1,0 +1,75 @@
+"""Reproduce the paper's evaluation figures from the analytical models.
+
+    PYTHONPATH=src python examples/gemv_paper_repro.py
+
+Prints Table II, the Fig 9 throughput table, Fig 10 utilization curves,
+the Fig 11 speedup heatmap (2-bit persistent), and the Fig 13 DLA summary.
+"""
+import numpy as np
+
+from repro.core import arch_models as am
+from repro.core import gemv_model as gm
+from repro.core.efsm import BRAMAC_1DA, BRAMAC_2SA
+
+
+def table2():
+    print("=== Table II ===")
+    for v in (BRAMAC_2SA, BRAMAC_1DA):
+        lat = "/".join(str(v.mac2_latency(b)) for b in (2, 4, 8))
+        par = "/".join(str(v.macs_in_parallel(b)) for b in (2, 4, 8))
+        print(f"  {v.name}: {par} MACs in parallel, {lat} cycle latency, "
+              f"{v.block_area_overhead:.1%} block / "
+              f"{v.core_area_overhead:.1%} core area overhead")
+
+
+def fig9():
+    print("=== Fig 9: peak MAC throughput (TMAC/s) ===")
+    for bits in (2, 4, 8):
+        base = am.peak_throughput(bits)["total"] / 1e12
+        row = [f"baseline {base:5.1f}"]
+        for arch in (BRAMAC_2SA, BRAMAC_1DA, am.CCB, am.COMEFA_D,
+                     am.COMEFA_A):
+            tot = am.peak_throughput(bits, arch)["total"] / 1e12
+            row.append(f"{arch.name} {tot:5.1f} ({tot / base:.2f}x)")
+        print(f"  {bits}-bit: " + " | ".join(row))
+
+
+def fig10():
+    print("=== Fig 10: BRAM utilization efficiency ===")
+    t = am.utilization_table()
+    ps = list(range(2, 9))
+    for name, vals in t.items():
+        print(f"  {name:11s}: " +
+              " ".join(f"{p}b={v:.2f}" for p, v in zip(ps, vals)))
+    adv = am.utilization_advantage()
+    print(f"  avg advantage: {adv['vs_ccb']:.2f}x vs CCB (paper 1.3x), "
+          f"{adv['vs_comefa']:.2f}x vs CoMeFa (paper 1.1x)")
+
+
+def fig11():
+    print("=== Fig 11: BRAMAC-1DA GEMV speedup over CCB-Pack-4 "
+          "(2-bit persistent) ===")
+    grid = gm.speedup_grid(2, persistent=True)
+    cols = gm.COL_SIZES
+    print("      C=" + "".join(f"{c:>7}" for c in cols))
+    for r in gm.ROW_SIZES:
+        print(f"  R={r:4d} " + "".join(f"{grid[(r, c)]:7.2f}" for c in cols))
+    ms = gm.max_speedups()
+    print("  up-to: " + ", ".join(
+        f"{k[1]}b-{k[0][:7]} {v:.2f}x" for k, v in sorted(ms.items())))
+
+
+def fig13():
+    from repro.core.dla_model import average_speedups, case_study
+    print("=== Fig 13: DLA-BRAMAC case study (avg over 2/4/8-bit) ===")
+    for (model, vname), row in average_speedups(case_study()).items():
+        print(f"  {model:9s} {vname}: {row['speedup']:.2f}x speedup at "
+              f"{row['rel_area']:.2f}x DSP+BRAM area")
+
+
+if __name__ == "__main__":
+    table2()
+    fig9()
+    fig10()
+    fig11()
+    fig13()

@@ -1,0 +1,56 @@
+"""Batched serving with BRAMAC-quantized execution — the paper's
+tiling-based inference deployment (§VI) on the serving engine.
+
+    PYTHONPATH=src python examples/serve_quantized.py [--bits 4]
+
+Loads a small model, serves a batch of prompts twice — fp32 and through
+the BRAMAC int-quantized QAT path — and reports agreement + tokens/s.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.bramac_linear import QuantConfig
+from repro.models import model as M
+from repro.runtime.serve import Engine
+
+
+def run(cfg, params, prompts, new_tokens):
+    eng = Engine(cfg, params, num_slots=4, max_seq=96)
+    reqs = [eng.submit(p, new_tokens) for p in prompts]
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    toks = sum(len(r.out_tokens) for r in reqs)
+    return [r.out_tokens for r in reqs], toks / dt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=8, choices=(2, 4, 8))
+    args = ap.parse_args()
+
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in
+               (9, 17, 5, 24, 12, 7)]
+
+    fp_out, fp_tps = run(cfg, params, prompts, new_tokens=8)
+    qcfg = cfg.replace(quant=QuantConfig(enabled=True, bits_w=args.bits,
+                                         bits_a=args.bits))
+    q_out, q_tps = run(qcfg, params, prompts, new_tokens=8)
+
+    agree = np.mean([np.mean(np.array(a) == np.array(b))
+                     for a, b in zip(fp_out, q_out)])
+    print(f"served {len(prompts)} prompts x 8 tokens")
+    print(f"  fp32 path: {fp_tps:.1f} tok/s")
+    print(f"  BRAMAC int{args.bits} path: {q_tps:.1f} tok/s")
+    print(f"  greedy-token agreement int{args.bits} vs fp32: {agree:.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""End-to-end training driver: a ~100M-parameter granite-family model
+trained for a few hundred steps on the synthetic Markov LM stream, with
+checkpointing, restart, and (optionally) the BRAMAC QAT path.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py \
+        [--steps 300] [--quant] [--params-100m]
+
+On the default (CI-sized) config this takes a couple of minutes on CPU;
+--params-100m selects the genuine ~100M-parameter model for a longer run.
+Loss must drop well below the uniform baseline ln(vocab)≈5.5 — the stream
+is an order-1 Markov chain, so a converged model approaches its entropy.
+"""
+import argparse
+import os
+import time
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.bramac_linear import QuantConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def build_cfg(params_100m: bool, quant: bool) -> ModelConfig:
+    if params_100m:     # ~104M params: 12L, d=768, llama-style
+        cfg = ModelConfig(
+            name="tiny-lm-100m", family="dense", num_layers=12, d_model=768,
+            num_heads=12, num_kv_heads=4, d_ff=2048, vocab_size=8192,
+            layer_pattern=("attn+dense",), dtype="float32")
+    else:               # CI-sized
+        cfg = ModelConfig(
+            name="tiny-lm", family="dense", num_layers=4, d_model=256,
+            num_heads=8, num_kv_heads=4, d_ff=512, vocab_size=512,
+            layer_pattern=("attn+dense",), dtype="float32")
+    if quant:
+        cfg = cfg.replace(quant=QuantConfig(enabled=True, bits_w=8, bits_a=8))
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quant", action="store_true",
+                    help="train through the BRAMAC int8 QAT path")
+    ap.add_argument("--params-100m", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/bramac_tiny_lm")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.params_100m, args.quant)
+    n_params = sum(l.size for l in jax.tree_util.tree_leaves(
+        jax.eval_shape(lambda k: M.init_params(cfg, k),
+                       jax.ShapeDtypeStruct((2,), jax.numpy.uint32))))
+    print(f"model {cfg.name}: {n_params / 1e6:.1f}M params, "
+          f"quant={'int8 QAT' if args.quant else 'off'}")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                         async_ckpt=True,
+                         opt=adamw.AdamWConfig(lr=1e-3, weight_decay=0.01))
+    trainer = Trainer(cfg, tcfg, params)
+    resumed = trainer.restore_latest()
+    if resumed:
+        print(f"resumed from checkpoint at step {resumed}")
+
+    pipe = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch, seed=0))
+    t0 = time.time()
+    hist = trainer.train(pipe, args.steps)
+    dt = time.time() - t0
+    if hist:
+        first = sum(h["loss"] for h in hist[:5]) / max(len(hist[:5]), 1)
+        last = sum(h["loss"] for h in hist[-5:]) / max(len(hist[-5:]), 1)
+        tok_s = args.batch * args.seq * len(hist) / dt
+        print(f"steps {trainer.step}: loss {first:.3f} -> {last:.3f} "
+              f"({tok_s:.0f} tok/s)")
+        assert last < first, "loss did not decrease"
+    print(f"checkpoints in {args.ckpt_dir}: kept "
+          f"{sorted(os.listdir(args.ckpt_dir))[-1]}")
+
+
+if __name__ == "__main__":
+    main()

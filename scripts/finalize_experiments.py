@@ -1,0 +1,56 @@
+"""Splice generated tables into EXPERIMENTS.md placeholders.
+
+    PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+import io
+import re
+import subprocess
+import sys
+from contextlib import redirect_stdout
+
+
+def capture(mod_argv):
+    old = sys.argv
+    buf = io.StringIO()
+    try:
+        sys.argv = mod_argv
+        with redirect_stdout(buf):
+            if "make_roofline_table" in mod_argv[0]:
+                import importlib
+                import make_roofline_table as m
+                importlib.reload(m)
+                m.main()
+            else:
+                import importlib
+                import perf_report as m
+                importlib.reload(m)
+                m.main()
+    finally:
+        sys.argv = old
+    return buf.getvalue()
+
+
+def main():
+    sys.path.insert(0, "scripts")
+    dry_pod = capture(["scripts/make_roofline_table.py", "--mesh", "pod"])
+    dry_multi = capture(["scripts/make_roofline_table.py", "--mesh",
+                         "multipod"])
+    perf = capture(["scripts/perf_report.py"])
+
+    # split the pod output into dryrun and roofline sections
+    idx = dry_pod.find("### §Roofline")
+    dry_tbl, roof_tbl = dry_pod[:idx], dry_pod[idx:]
+
+    text = open("EXPERIMENTS.md").read()
+    text = text.replace("<!-- DRYRUN_TABLE -->",
+                        dry_tbl.strip() + "\n\n" + dry_multi.strip())
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roof_tbl.strip())
+    text = text.replace("<!-- PERF_TABLE -->",
+                        "```\n" + perf.strip() + "\n```")
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md updated "
+          f"({len(dry_tbl)}+{len(roof_tbl)}+{len(perf)} chars spliced)")
+
+
+if __name__ == "__main__":
+    main()

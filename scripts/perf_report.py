@@ -1,0 +1,57 @@
+"""§Perf iteration report: baseline vs variants for the hillclimbed cells.
+
+    PYTHONPATH=src python scripts/perf_report.py
+"""
+import glob
+import json
+import os
+from collections import defaultdict
+
+
+def load_all(d="results/dryrun"):
+    cells = defaultdict(dict)
+    for f in glob.glob(os.path.join(d, "*__pod*.json")):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        variant = r.get("variant", "baseline")
+        cells[(r["arch"], r["shape"])][variant] = r
+    return cells
+
+
+def fmt(x):
+    return f"{x * 1e3:9.1f}ms" if x < 10 else f"{x:9.2f}s "
+
+
+def main():
+    cells = load_all()
+    for (arch, shape), variants in sorted(cells.items()):
+        if len(variants) < 2:
+            continue
+        base = variants["baseline"]
+        print(f"\n=== {arch} × {shape} (pod) ===")
+        hdr = (f"{'variant':22s} {'compute':>11s} {'memory':>11s} "
+               f"{'collective':>11s} {'dominant':>10s} {'useful':>7s} "
+               f"{'peak-mem':>9s}")
+        print(hdr)
+        order = ["baseline"] + sorted(v for v in variants if v != "baseline")
+        b = base["roofline"]
+        for v in order:
+            r = variants[v]
+            ro = r["roofline"]
+            peak = r["memory"]["peak_est_bytes_per_dev"] / 1e9
+            mark = ""
+            if v != "baseline":
+                dom_b = max(b["compute_s"], b["memory_s"], b["collective_s"])
+                dom_v = max(ro["compute_s"], ro["memory_s"],
+                            ro["collective_s"])
+                mark = f"  ({dom_b / dom_v:５.2f}x step-bound)" \
+                    if dom_v > 0 else ""
+                mark = mark.replace("５", "")
+            print(f"{v:22s} {fmt(ro['compute_s'])} {fmt(ro['memory_s'])} "
+                  f"{fmt(ro['collective_s'])} {ro['dominant']:>10s} "
+                  f"{ro['useful_ratio']:7.3f} {peak:8.1f}G{mark}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Refresh the generated sections of EXPERIMENTS.md in place (idempotent —
+works after the initial placeholder splice by replacing section bodies).
+
+    PYTHONPATH=src python scripts/refresh_experiments.py
+"""
+import io
+import re
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, "scripts")
+
+
+def capture(argv):
+    old = sys.argv
+    buf = io.StringIO()
+    try:
+        sys.argv = argv
+        with redirect_stdout(buf):
+            import importlib
+            if "roofline" in argv[0]:
+                import make_roofline_table as m
+            else:
+                import perf_report as m
+            importlib.reload(m)
+            m.main()
+    finally:
+        sys.argv = old
+    return buf.getvalue().strip()
+
+
+def main():
+    pod = capture(["scripts/make_roofline_table.py", "--mesh", "pod"])
+    multi = capture(["scripts/make_roofline_table.py", "--mesh", "multipod"])
+    perf = capture(["scripts/perf_report.py"])
+
+    i = pod.find("### §Roofline")
+    dry_tbl, roof_tbl = pod[:i].strip(), pod[i:].strip()
+
+    text = open("EXPERIMENTS.md").read()
+
+    def replace_span(text, start_pat, end_pat, new):
+        s = re.search(start_pat, text).start()
+        e = re.search(end_pat, text[s:]).start() + s
+        return text[:s] + new + "\n\n" + text[e:]
+
+    text = replace_span(text, r"### §Dry-run \(mesh = 16x16\)",
+                        r"## §Roofline", dry_tbl + "\n\n" + multi)
+    text = replace_span(text, r"### §Roofline \(single-pod",
+                        r"## §Perf", roof_tbl)
+    # the fenced perf table
+    text = re.sub(r"```\n=== .*?```", "```\n" + perf + "\n```", text,
+                  flags=re.S)
+    open("EXPERIMENTS.md", "w").write(text)
+    print("refreshed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Checkpointing: atomic, async-capable, mesh-agnostic (elastic restore).
+
+Layout:  <dir>/step_<N>/
+            manifest.json     {path: {dtype, shape}}, treedef repr
+            arrays.npz        flat key → ndarray
+
+Arrays are saved by *path string*, not by position, so checkpoints survive
+refactors that reorder dicts.  `restore(..., shardings=...)` places leaves
+onto any mesh — resharding to a different topology (elastic scale-up/down)
+is just a different `shardings` pytree.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import numpy as np
+
+import jax
+import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+
+SEP = "/"
+
+_NATIVE_KINDS = set("biufc")
+
+
+def _encode(v: np.ndarray) -> np.ndarray:
+    """npz can't store ml_dtypes (bfloat16, …) — round-trip via raw bytes."""
+    if v.dtype.kind in _NATIVE_KINDS:
+        return v
+    return np.frombuffer(v.tobytes(), np.uint8).reshape(
+        v.shape + (v.dtype.itemsize,))
+
+
+def _decode(raw: np.ndarray, dtype_str: str, shape) -> np.ndarray:
+    dtype = np.dtype(dtype_str)
+    if dtype.kind in _NATIVE_KINDS:
+        return raw
+    return np.frombuffer(raw.tobytes(), dtype).reshape(shape)
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+
+    def visit(path, leaf):
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+        return leaf
+
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return flat
+
+
+def _unflatten_into(skeleton, flat: dict):
+    def visit(path, leaf):
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        return flat[key]
+
+    return jax.tree_util.tree_map_with_path(visit, skeleton)
+
+
+def save(directory: str, step: int, tree, *, blocking: bool = True):
+    """Atomic save of a pytree; pass blocking=False for async (snapshot is
+    taken synchronously via device_get, the file write happens in a
+    thread — the standard async-checkpoint split)."""
+    flat = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+
+    def write():
+        final = os.path.join(directory, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k.replace(SEP, "|"): _encode(v) for k, v in flat.items()})
+        manifest = {k: {"dtype": str(v.dtype), "shape": list(v.shape)}
+                    for k, v in flat.items()}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": manifest}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+
+    if blocking:
+        write()
+        return None
+    t = threading.Thread(target=write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, skeleton, *, shardings=None):
+    """Restore into `skeleton`'s structure.  `shardings` (optional pytree of
+    NamedSharding) reshards every leaf — elastic restore onto a new mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)["leaves"]
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        flat = {k.replace("|", SEP):
+                _decode(z[k], manifest[k.replace("|", SEP)]["dtype"],
+                        manifest[k.replace("|", SEP)]["shape"])
+                for k in z.files}
+    tree = _unflatten_into(skeleton, flat)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda leaf, s: jax.device_put(leaf, s), tree, shardings)
+    else:
+        tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+    # restore original dtypes (npz keeps them, but guard vs skeleton)
+    return jax.tree_util.tree_map(
+        lambda leaf, ref: leaf.astype(ref.dtype)
+        if hasattr(ref, "dtype") and leaf.dtype != ref.dtype else leaf,
+        tree, skeleton)
+
+
+def prune(directory: str, keep: int = 3):
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)

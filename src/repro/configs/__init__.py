@@ -1,0 +1,16 @@
+"""Architecture registry: --arch <id> → ModelConfig (full or smoke)."""
+from __future__ import annotations
+
+from repro.configs import (archs)
+from repro.configs.base import ModelConfig
+
+FULL = archs.FULL
+SMOKE = archs.SMOKE
+ARCH_IDS = tuple(FULL.keys())
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    table = SMOKE if smoke else FULL
+    if arch not in table:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(table)}")
+    return table[arch]()

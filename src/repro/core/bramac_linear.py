@@ -1,0 +1,136 @@
+"""BRAMAC quantized linear — the paper's technique as a composable module.
+
+Two execution styles, matching the paper's two deployment modes:
+
+  * **training / QAT** (`mode="qat"`): fake-quant forward through the BRAMAC
+    integer dataflow with straight-through gradients (`ops.bramac_dense`).
+  * **serving** (`mode="serve"`): weights are quantized **once** offline
+    (`prepare_serving`) into int8/packed storage — the "main BRAM" resident
+    layout — and every call quantizes activations on the fly and runs the
+    integer kernel.  This is the persistent/tiling inference of §VI.
+
+`QuantConfig.bits ∈ {2,4,8}` selects the MAC precision exactly as BRAMAC's
+`prec` instruction field does.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """BRAMAC precision config (the CIM instruction's static fields)."""
+    enabled: bool = False
+    bits_w: int = 8          # weight precision (2/4/8)
+    bits_a: int = 8          # activation precision (2/4/8)
+    use_kernel: bool = False  # route through the Pallas kernel (slow on CPU
+    #                           interpret; ref dataflow otherwise — identical
+    #                           integer semantics, tested in test_kernels.py)
+
+    def __post_init__(self):
+        if self.bits_w not in quant.SUPPORTED_BITS or \
+           self.bits_a not in quant.SUPPORTED_BITS:
+            raise ValueError("BRAMAC supports 2/4/8-bit only")
+
+
+FP32 = QuantConfig(enabled=False)
+
+
+def dense(x: jax.Array, w, cfg: QuantConfig | None) -> jax.Array:
+    """Linear y = x @ w through the configured path.
+
+    w may be a float array (fp or QAT fake-quant path) or a pre-quantized
+    `QuantizedTensor` (serving path: int weights resident in HBM — the
+    persistent-weights deployment of §VI)."""
+    if isinstance(w, quant.QuantizedTensor):
+        return serve_dense(x, w, cfg)
+    if cfg is None or not cfg.enabled:
+        return x @ w
+    return ops.bramac_dense(x, w, cfg.bits_w, cfg.bits_a, cfg.use_kernel)
+
+
+# ---------------------------------------------------------------------------
+# Serving path: offline weight quantization ("persistent weights in BRAM")
+# ---------------------------------------------------------------------------
+
+def prepare_serving(w: jax.Array, cfg: QuantConfig) -> quant.QuantizedTensor:
+    """Quantize a weight once for inference.
+
+    All matmul weights here are (..., in, out): per-output-channel scales
+    over the contraction axis (−2); 4/2-bit values are bit-packed along the
+    contraction axis — the dense main-BRAM storage layout that gives the
+    paper its 100% utilization (Fig 10), and handles stacked layer/expert
+    weights of any rank."""
+    # axis −2 end-relative: stacked (periods, …, in, out) weights get
+    # scan-sliced at trace time, so static axes must count from the end.
+    return quant.quantize(w, cfg.bits_w, axis=w.ndim - 2,
+                          pack=cfg.bits_w < 8, pack_axis=-2)
+
+
+def serve_dense(x: jax.Array, qw: quant.QuantizedTensor,
+                cfg: QuantConfig | None) -> jax.Array:
+    """Inference-time linear with pre-quantized HBM-resident weights.
+
+    TPU adaptation note (DESIGN.md §7): the MXU executes one int8×int8
+    pass natively, which is the nd=1 endpoint of the BRAMAC digit loop for
+    ≤8-bit operands; the bit-serial structure survives as the *storage*
+    format (packed int4/int2) and in the validated Pallas kernel."""
+    bits_a = cfg.bits_a if (cfg and cfg.enabled) else min(qw.bits, 8)
+    use_kernel = bool(cfg.use_kernel) if cfg else False
+    x2 = x.reshape(-1, x.shape[-1])
+    qx = quant.quantize(x2, bits_a, axis=-1)
+    w_vals = qw.unpacked_values()
+    y = ops.quant_matmul(qx.values, w_vals, qx.scale, qw.scale,
+                         bits_a=bits_a, bits_w=qw.bits,
+                         out_dtype=x.dtype, use_kernel=use_kernel)
+    return y.reshape(*x.shape[:-1], y.shape[-1])
+
+
+def serve_einsum_edf(x: jax.Array, qw: quant.QuantizedTensor,
+                     transpose_out: bool, bits_a: int = 8) -> jax.Array:
+    """Quantized expert einsum: "ecd,edf->ecf" (transpose_out=False) or
+    "ecf,efd->ecd" (True, same contraction layout).  Batched int8
+    dot_general with a dequant epilogue — expert parallelism preserved."""
+    qx = quant.quantize(x, bits_a, axis=-1)                 # per (e,c) row
+    acc = jax.lax.dot_general(
+        qx.values, qw.unpacked_values(),
+        (((2,), (1,)), ((0,), (0,))),                       # batch E
+        preferred_element_type=jnp.int32)                   # (E, C, f)
+    return (acc.astype(jnp.float32) * qx.scale * qw.scale   # (E,1,f) bcast
+            ).astype(x.dtype)
+
+
+# Matmul weights consumed through dense()/serve_einsum (quantizable at
+# serving time).  Excluded by design: embedding (gather), router
+# (f32 softmax), r_gates/w_if/w_bc/w_dt_* (raw f32 recurrence matmuls),
+# conv/a_log/norms (element-wise consumers).
+_SERVABLE = frozenset(
+    "wq wk wv wo w_gate w_up w_down unembed w_dq w_uq w_dkv w_uk w_uv "
+    "w_kr w_in w_out w_gates".split())
+
+
+def tree_prepare_serving(params: Any, cfg: QuantConfig,
+                         predicate=None) -> Any:
+    """Quantize matmul weights (incl. stacked layer/expert tensors) in a
+    parameter pytree for serving."""
+    def default_pred(path: str, leaf) -> bool:
+        return leaf.ndim >= 2 and path.split(".")[-1] in _SERVABLE
+
+    pred = predicate or default_pred
+
+    def visit(path, leaf):
+        pstr = ".".join(
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path)
+        if isinstance(leaf, jax.Array) and pred(pstr, leaf):
+            return prepare_serving(leaf, cfg)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params)

@@ -1,0 +1,117 @@
+"""Algorithm 1 — Hybrid Bit-Serial & Bit-Parallel MAC2, faithful JAX port.
+
+    P = W1*I1 + W2*I2   (all 2's complement n-bit, n ∈ {2, 4, 8})
+
+The paper's dataflow (BRAMAC §III-B, Fig 3/4):
+
+  * A 7-row "dummy array" holds rows
+        [0] zero     [1] W1      [2] W2      [3] W1+W2
+        [4] Inverter [5] P       [6] Accumulator
+  * For input bit i from MSB down to LSB, the bit-pair {I2[i], I1[i]}
+    selects one of rows 0..3 as `psum` (a 4-entry LUT — this is what makes
+    the dataflow *bit-parallel* across the whole 160-bit row).
+  * If i is the MSB: P += ~psum + 1 (2's complement subtraction, using the
+    Inverter row), else P += psum.  If i != LSB: P <<= 1.
+  * After the LSB pass, P holds the MAC2 result; row 6 accumulates multiple
+    MAC2s of a long dot product in place.
+
+This module implements the loop bit-exactly (including the inverter-based
+subtraction) with `jax.lax` control flow, vectorized so that W1/W2 are whole
+rows ("lanes") exactly like the 160-bit SIMD adder operating on sign-extended
+lanes.  It is the semantic oracle for the Pallas kernels and the cycle model.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import SUPPORTED_BITS
+
+__all__ = ["mac2", "mac2_reference", "mac2_mvm", "lane_width"]
+
+
+def lane_width(bits: int) -> int:
+    """Sign-extended lane width per element (§III-C2): 8/16/32 for 2/4/8-bit.
+
+    A n-bit MAC2 needs at most 2n+1 bits; the sign-extension mux provides
+    8/16/32-bit lanes so sequential MAC2s can be accumulated in-place (row 6).
+    """
+    return {2: 8, 4: 16, 8: 32}[bits]
+
+
+@partial(jax.jit, static_argnames=("bits", "signed_inputs"))
+def mac2(w1: jax.Array, w2: jax.Array, i1: jax.Array, i2: jax.Array,
+         bits: int, signed_inputs: bool = True) -> jax.Array:
+    """Faithful Algorithm 1. w1/w2: int arrays (lanes), i1/i2: scalars or
+    arrays broadcastable against lanes. Returns int32 P = w1*i1 + w2*i2.
+
+    The loop runs over input bits MSB→LSB; each iteration does the 4-way row
+    select and one bit-parallel add, matching the eFSM schedule.
+    """
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"bits must be one of {SUPPORTED_BITS}")
+    w1 = w1.astype(jnp.int32)          # sign-extension mux: lanes widened
+    w2 = w2.astype(jnp.int32)
+    i1 = jnp.asarray(i1, jnp.int32)
+    i2 = jnp.asarray(i2, jnp.int32)
+    # dummy-array rows 0..3: the LUT  {0, W1, W2, W1+W2}
+    zero = jnp.zeros_like(w1)
+    lut = jnp.stack([zero, w1, w2, w1 + w2], axis=0)
+
+    u1 = i1 & ((1 << bits) - 1)        # unsigned bit views of the inputs
+    u2 = i2 & ((1 << bits) - 1)
+
+    def body(i, p):
+        # i counts n-1 downto 0
+        b1 = (u1 >> i) & 1
+        b2 = (u2 >> i) & 1
+        sel = b2 * 2 + b1              # {I2[i], I1[i]} → demux select
+        # 2-to-4 demux row select, per lane (row read of the dummy array)
+        sel_b = jnp.broadcast_to(sel, p.shape)
+        lut_b = jnp.broadcast_to(lut, (4,) + p.shape)
+        psum = jnp.take_along_axis(lut_b, sel_b[None].astype(jnp.int32), axis=0)[0]
+        is_msb = jnp.logical_and(i == bits - 1, signed_inputs)
+        # MSB: P += inv(psum) + 1   (row 4, the Inverter, then +1 carry-in)
+        # else P += psum
+        add = jnp.where(is_msb, (~psum) + 1, psum)
+        p = p + add
+        # shift left unless LSB
+        p = jnp.where(i != 0, p << 1, p)
+        return p
+
+    p0 = jnp.zeros(jnp.broadcast_shapes(w1.shape, jnp.shape(i1)), jnp.int32)
+    p = jax.lax.fori_loop(0, bits, lambda k, p: body(bits - 1 - k, p), p0)
+    return p
+
+
+def mac2_reference(w1, w2, i1, i2):
+    """Direct integer oracle."""
+    return (jnp.asarray(w1, jnp.int32) * jnp.asarray(i1, jnp.int32)
+            + jnp.asarray(w2, jnp.int32) * jnp.asarray(i2, jnp.int32))
+
+
+@partial(jax.jit, static_argnames=("bits", "signed_inputs"))
+def mac2_mvm(w: jax.Array, x: jax.Array, bits: int,
+             signed_inputs: bool = True) -> jax.Array:
+    """Matrix-vector multiply via chained MAC2s (paper Fig 2).
+
+    w: (rows, cols) int weights; x: (cols,) int inputs; cols must be even.
+    Column pairs (2k, 2k+1) are issued as MAC2s sharing the input pair
+    (x[2k], x[2k+1]); results accumulate in the Accumulator row (row 6).
+    Returns int32 (rows,) = w @ x.
+    """
+    rows, cols = w.shape
+    if cols % 2:
+        raise ValueError("mac2_mvm needs an even number of columns (MAC2 pairs)")
+    wp = w.astype(jnp.int32).reshape(rows, cols // 2, 2)
+    xp = x.astype(jnp.int32).reshape(cols // 2, 2)
+
+    def one_pair(k, acc):
+        p = mac2(wp[:, k, 0], wp[:, k, 1], xp[k, 0], xp[k, 1],
+                 bits=bits, signed_inputs=signed_inputs)
+        return acc + p                  # in-place accumulation, row 6 → row 7
+
+    acc0 = jnp.zeros((rows,), jnp.int32)
+    return jax.lax.fori_loop(0, cols // 2, one_pair, acc0)

@@ -1,0 +1,219 @@
+"""Symmetric low-precision quantization + digit decomposition (BRAMAC §III).
+
+BRAMAC supports 2's complement 2/4/8-bit MAC.  This module provides:
+
+  * symmetric per-channel quantization to n ∈ {2, 4, 8} bits,
+  * bit-packing of sub-byte tensors into int8 storage ("main BRAM" layout),
+  * the radix-4 *digit* decomposition used by the hybrid bit-serial &
+    bit-parallel dataflow: a 2's-complement n-bit integer x decomposes into
+    n/2 base-4 digits d_j ∈ {0..3} with the most-significant digit carrying
+    negative weight on its top bit:
+
+        x = -4^(n/2-1) * 2 * msb2(d_top) + ...   (handled as signed top digit)
+
+    We use the equivalent form actually implemented in the kernels:
+        x = sum_j 4^j * d_j            for unsigned x
+        x = (as above) - 2^n * sign    for signed (top bit negative), i.e.
+        signed top digit dt ∈ {-2,-1,0,1} = d_top - 4*(d_top>=2).
+
+All functions are pure jnp and jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+SUPPORTED_BITS = (2, 4, 8)
+
+
+def qrange(bits: int) -> tuple[int, int]:
+    """Symmetric signed range for n-bit 2's complement, e.g. 8-bit → [-128, 127]."""
+    return -(1 << (bits - 1)), (1 << (bits - 1)) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """A quantized tensor: int8 storage (possibly bit-packed) + scale.
+
+    values: int8 array. If packed, several sub-byte elements per int8
+            along `packed_axis`.
+    scale:  f32, broadcastable to the logical (unpacked) shape.
+    bits:   2, 4, or 8.
+    packed: whether `values` holds bit-packed sub-byte data.
+    shape:  logical (unpacked) shape at creation (informational — unpack
+            derives shapes from `values`, so QTs survive scan slicing).
+
+    Registered as a pytree (bits/packed/shape are static aux data) so
+    quantized parameter trees flow through jit/checkpoint/sharding — the
+    "persistent weights in main BRAM" serving layout.
+    """
+    values: jax.Array
+    scale: jax.Array
+    bits: int
+    packed: bool
+    shape: tuple[int, ...]
+    packed_axis: int = -1
+
+    def dequantize(self) -> jax.Array:
+        return self.unpacked_values().astype(self.scale.dtype) * self.scale
+
+    def unpacked_values(self) -> jax.Array:
+        if not self.packed:
+            return self.values
+        return unpack_axis(self.values, self.bits, self.packed_axis)
+
+
+def _qt_unflatten(aux, children):
+    bits, packed, shape, packed_axis = aux
+    values, scale = children
+    return QuantizedTensor(values, scale, bits, packed, shape, packed_axis)
+
+
+jax.tree_util.register_pytree_with_keys(
+    QuantizedTensor,
+    lambda qt: (((jax.tree_util.GetAttrKey("values"), qt.values),
+                 (jax.tree_util.GetAttrKey("scale"), qt.scale)),
+                (qt.bits, qt.packed, qt.shape, qt.packed_axis)),
+    _qt_unflatten)
+
+
+def _check_bits(bits: int) -> None:
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"BRAMAC supports bits in {SUPPORTED_BITS}, got {bits}")
+
+
+def quantize(x: jax.Array, bits: int, axis: int | None = -1,
+             pack: bool = False, pack_axis: int = -1) -> QuantizedTensor:
+    """Symmetric quantization of x to n-bit 2's complement.
+
+    axis: channel axis for per-channel scales (None = per-tensor).
+    pack: bit-pack sub-byte values along `pack_axis`.
+    """
+    _check_bits(bits)
+    lo, hi = qrange(bits)
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / hi
+    q = jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int8)
+    if pack and bits < 8:
+        return QuantizedTensor(pack_bits_axis(q, bits, pack_axis),
+                               scale.astype(jnp.float32),
+                               bits, True, x.shape, pack_axis)
+    return QuantizedTensor(q, scale.astype(jnp.float32), bits, False, x.shape)
+
+
+def pack_bits(q: jax.Array, bits: int) -> jax.Array:
+    """Pack sub-byte signed ints along the last axis into int8 storage.
+
+    4-bit: 2 per byte; 2-bit: 4 per byte.  Matches the BRAMAC "main BRAM"
+    dense storage that gives it 100% utilization at 2/4/8-bit (Fig 10).
+    """
+    _check_bits(bits)
+    if bits == 8:
+        return q.astype(jnp.int8)
+    per = 8 // bits
+    if q.shape[-1] % per:
+        raise ValueError(f"last dim {q.shape[-1]} not divisible by {per}")
+    u = (q.astype(jnp.int32) & ((1 << bits) - 1)).astype(jnp.uint8)
+    u = u.reshape(*q.shape[:-1], q.shape[-1] // per, per)
+    shifts = (jnp.arange(per, dtype=jnp.uint8) * bits).astype(jnp.uint8)
+    packed = jnp.zeros(u.shape[:-1], jnp.uint8)
+    for j in range(per):
+        packed = packed | (u[..., j] << shifts[j])
+    return packed.astype(jnp.int8)
+
+
+def unpack(packed: jax.Array, bits: int, shape: tuple[int, ...]) -> jax.Array:
+    """Inverse of pack_bits; returns int8 with sign-extension (§III-C2's mux)."""
+    _check_bits(bits)
+    if bits == 8:
+        return packed.astype(jnp.int8)
+    per = 8 // bits
+    u = packed.astype(jnp.uint8)
+    parts = []
+    mask = (1 << bits) - 1
+    for j in range(per):
+        parts.append((u >> (j * bits)) & mask)
+    v = jnp.stack(parts, axis=-1).reshape(shape).astype(jnp.int32)
+    # sign extension: values >= 2^(bits-1) are negative
+    v = jnp.where(v >= (1 << (bits - 1)), v - (1 << bits), v)
+    return v.astype(jnp.int8)
+
+
+def pack_bits_axis(q: jax.Array, bits: int, axis: int) -> jax.Array:
+    """pack_bits along an arbitrary axis (moveaxis → pack → moveaxis)."""
+    if axis in (-1, q.ndim - 1):
+        return pack_bits(q, bits)
+    moved = jnp.moveaxis(q, axis, -1)
+    return jnp.moveaxis(pack_bits(moved, bits), -1, axis)
+
+
+def unpack_axis(packed: jax.Array, bits: int, axis: int) -> jax.Array:
+    """Inverse of pack_bits_axis; logical shape derived from `packed`."""
+    per = 8 // bits
+    if axis in (-1, packed.ndim - 1):
+        shape = packed.shape[:-1] + (packed.shape[-1] * per,)
+        return unpack(packed, bits, shape)
+    moved = jnp.moveaxis(packed, axis, -1)
+    shape = moved.shape[:-1] + (moved.shape[-1] * per,)
+    return jnp.moveaxis(unpack(moved, bits, shape), -1, axis)
+
+
+def num_digits(bits: int) -> int:
+    """Radix-4 digit count = ceil(bits/2); BRAMAC pairs two bits per pass."""
+    return (bits + 1) // 2
+
+
+@partial(jax.jit, static_argnames=("bits", "signed"))
+def to_radix4_digits(q: jax.Array, bits: int, signed: bool = True) -> jax.Array:
+    """Decompose n-bit ints into radix-4 digits, least-significant first.
+
+    Returns int8 array of shape (num_digits, *q.shape).
+    For signed inputs the TOP digit is signed in {-2..1} (2's complement MSB
+    carries negative weight — Algorithm 1 line 5); lower digits ∈ {0..3}.
+
+    Invariant:  sum_j 4^j * digits[j] == q  (exactly, in int32).
+    """
+    _check_bits(bits)
+    nd = num_digits(bits)
+    x = q.astype(jnp.int32)
+    u = x & ((1 << bits) - 1)  # reinterpret as unsigned n-bit
+    digits = []
+    for j in range(nd):
+        d = (u >> (2 * j)) & 0x3
+        if signed and j == nd - 1:
+            # top digit: its high bit is the sign bit of the n-bit number
+            d = jnp.where(d >= 2, d - 4, d)
+        digits.append(d.astype(jnp.int8))
+    return jnp.stack(digits, axis=0)
+
+
+def from_radix4_digits(digits: jax.Array) -> jax.Array:
+    """Recompose (for tests): sum_j 4^j * digits[j]."""
+    nd = digits.shape[0]
+    w = (4 ** jnp.arange(nd, dtype=jnp.int32)).reshape((nd,) + (1,) * (digits.ndim - 1))
+    return jnp.sum(digits.astype(jnp.int32) * w, axis=0)
+
+
+@partial(jax.jit, static_argnames=("bits", "signed"))
+def to_bits(q: jax.Array, bits: int, signed: bool = True) -> jax.Array:
+    """Pure bit-serial decomposition (one bit per plane), LSB first.
+
+    MSB plane is in {-1, 0} for signed inputs (Algorithm 1's subtraction).
+    Invariant: sum_i 2^i * planes[i] == q.
+    """
+    _check_bits(bits)
+    x = q.astype(jnp.int32)
+    u = x & ((1 << bits) - 1)
+    planes = []
+    for i in range(bits):
+        b = (u >> i) & 1
+        if signed and i == bits - 1:
+            b = -b
+        planes.append(b.astype(jnp.int8))
+    return jnp.stack(planes, axis=0)

@@ -1,0 +1,58 @@
+"""Deterministic synthetic token pipeline — stateless, shard-aware,
+restart/straggler friendly.
+
+Every batch is a pure function of (seed, step), so:
+  * restart-after-failure resumes mid-run with zero drift (fault tolerance),
+  * any host can regenerate any shard (no data-loader state to checkpoint),
+  * skip-ahead is O(1) (straggler mitigation never re-reads).
+
+The synthetic LM stream embeds an order-k Markov structure so the training
+loss actually decreases (examples/train_tiny_lm.py demonstrates this).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    markov_order: int = 1
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # fixed random Markov transition with low entropy → learnable
+        k = min(cfg.vocab_size, 512)
+        trans = rng.dirichlet(np.full(k, 0.05), size=k).astype(np.float32)
+        self._trans = trans
+        self._k = k
+
+    def batch_np(self, step: int) -> dict:
+        """Global (unsharded) batch for `step` — deterministic."""
+        cfg = self.cfg
+        rng = np.random.default_rng((cfg.seed, step))
+        B, S = cfg.global_batch, cfg.seq_len
+        toks = np.empty((B, S + 1), np.int32)
+        toks[:, 0] = rng.integers(0, self._k, B)
+        # vectorized Markov walk
+        u = rng.random((B, S), np.float32)
+        cdf = np.cumsum(self._trans, axis=1)
+        for t in range(S):
+            toks[:, t + 1] = np.argmax(
+                cdf[toks[:, t]] > u[:, t:t + 1], axis=1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def batch(self, step: int, sharding=None) -> dict:
+        b = self.batch_np(step)
+        if sharding is None:
+            return {k: jax.numpy.asarray(v) for k, v in b.items()}
+        return {k: jax.device_put(v, sharding) for k, v in b.items()}

@@ -1,0 +1,100 @@
+"""Faithful BRAMAC dummy-array MAC2 kernel (validation kernel).
+
+Emulates the 7-row × lane dummy BRAM array (Fig 3a) as a VMEM scratch buffer
+and executes the *exact* eFSM dataflow for an MVM:
+
+  row 0: hard-wired zero           row 4: Inverter (for MSB subtraction)
+  row 1: W1 (sign-extended copy)   row 5: P (MAC2 result)
+  row 2: W2 (sign-extended copy)   row 6: Accumulator (dot-product acc)
+  row 3: W1+W2 (precomputed sum)
+
+For each weight-column pair the kernel copies W1/W2 into rows 1-2 (the
+main-array→dummy-array copy), computes row 3 with one adder pass (Cycle 3 of
+Fig 4), then streams the shared input bit-pair MSB→LSB: each pass reads one
+of rows 0-3 through the 2-to-4 demux select {I2[i], I1[i]}, adds it to P
+(via the Inverter row on the MSB pass) and shifts.  P accumulates into
+row 6 at the end of each MAC2 (Cycle 9).
+
+The inputs x live in SMEM (scalar memory) — they arrive via the CIM
+instruction in the paper, i.e. they are scalars broadcast to all 160 lanes,
+not vector data.  This kernel is deliberately structured for fidelity, not
+speed; `bramac_matmul.py` is the production kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_ZERO, _W1, _W2, _W12, _INV, _P, _ACC = range(7)
+
+
+def _kernel(x_ref, w_ref, out_ref, dummy, *, bits: int, n_pairs: int,
+            signed: bool):
+    lanes = dummy.shape[1]
+    dummy[_ZERO, :] = jnp.zeros((lanes,), jnp.int32)   # hard-coded zero row
+    dummy[_ACC, :] = jnp.zeros((lanes,), jnp.int32)    # reset accumulator
+
+    def mac2_pair(k, _):
+        # --- weight copy (main array → dummy array, sign-extension mux) ---
+        pair = w_ref[:, pl.dslice(2 * k, 2)]
+        dummy[_W1, :] = pair[:, 0].astype(jnp.int32)
+        dummy[_W2, :] = pair[:, 1].astype(jnp.int32)
+        # --- Cycle 3: row3 = W1 + W2 (one SIMD adder pass), P init ---
+        dummy[_W12, :] = dummy[_W1, :] + dummy[_W2, :]
+        dummy[_P, :] = jnp.zeros((lanes,), jnp.int32)
+        i1 = x_ref[2 * k].astype(jnp.int32) & ((1 << bits) - 1)
+        i2 = x_ref[2 * k + 1].astype(jnp.int32) & ((1 << bits) - 1)
+        # --- bit-serial passes, MSB → LSB (statically unrolled) ---
+        for i in range(bits - 1, -1, -1):
+            b1 = (i1 >> i) & 1
+            b2 = (i2 >> i) & 1
+            sel = b2 * 2 + b1                      # 2-to-4 demux
+            psum = dummy[pl.dslice(sel, 1), :][0]
+            if i == bits - 1 and signed:
+                dummy[_INV, :] = ~psum             # Inverter row
+                dummy[_P, :] = dummy[_P, :] + dummy[_INV, :] + 1
+            else:
+                dummy[_P, :] = dummy[_P, :] + psum
+            if i != 0:
+                dummy[_P, :] = dummy[_P, :] << 1   # shift-left write-back
+        # --- Cycle 9: accumulate P into the Accumulator row ---
+        dummy[_ACC, :] = dummy[_ACC, :] + dummy[_P, :]
+        return 0
+
+    jax.lax.fori_loop(0, n_pairs, mac2_pair, 0)
+    out_ref[:, 0] = dummy[_ACC, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "signed", "block", "interpret"))
+def mac2_mvm_kernel(w: jax.Array, x: jax.Array, *, bits: int,
+                    signed: bool = True, block: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """MVM w @ x through chained MAC2s on the dummy array.
+
+    w: (R, C) int8 (bits-bit values); x: (C,) int8.  C must be even.
+    Returns (R,) int32.
+    """
+    R, C = w.shape
+    if C % 2:
+        raise ValueError("columns must pair up for MAC2")
+    bl = min(block, R)
+    if R % bl:
+        raise ValueError(f"rows {R} not divisible by lane block {bl}")
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, n_pairs=C // 2, signed=signed),
+        grid=(R // bl,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),            # x: CIM instr
+            pl.BlockSpec((bl, C), lambda i: (i, 0)),          # weight tile
+        ],
+        out_specs=pl.BlockSpec((bl, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((7, bl), jnp.int32)],      # the dummy array
+        interpret=interpret,
+    )(x, w)
+    return out[:, 0]

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for the BRAMAC kernels.
+
+`quant_matmul_exact` is the ground truth (exact integer matmul + dequant).
+`quant_matmul_digit_ref` mirrors the radix-4 digit dataflow of the Pallas
+kernel step by step (useful to localize divergence: if digit_ref matches
+exact but the kernel doesn't, the bug is in the pallas lowering, not the
+algorithm).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import num_digits
+
+
+def quant_matmul_exact(x_q: jax.Array, w_q: jax.Array,
+                       x_scale: jax.Array, w_scale: jax.Array,
+                       out_dtype=jnp.float32) -> jax.Array:
+    """(M,K) int ⋅ (K,N) int → dequantized (M,N)."""
+    acc = jax.lax.dot_general(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+@partial(jax.jit, static_argnames=("bits_a", "signed", "out_dtype"))
+def quant_matmul_digit_ref(x_q: jax.Array, w_q: jax.Array,
+                           x_scale: jax.Array, w_scale: jax.Array,
+                           bits_a: int, signed: bool = True,
+                           out_dtype=jnp.float32) -> jax.Array:
+    """Radix-4 digit-pass matmul (BRAMAC hybrid dataflow), pure jnp.
+
+    For each base-4 digit j of the activations (two input bits per pass —
+    the MAC2 bit-pair), do one bit-parallel integer matmul against the
+    resident weights and shift-accumulate.  Top digit of signed inputs
+    carries negative weight (Algorithm 1 line 5).
+    """
+    nd = num_digits(bits_a)
+    u = x_q.astype(jnp.int32) & ((1 << bits_a) - 1)
+    acc = jnp.zeros((x_q.shape[0], w_q.shape[1]), jnp.int32)
+    w = w_q.astype(jnp.int8)
+    for j in range(nd):
+        d = (u >> (2 * j)) & 0x3
+        if signed and j == nd - 1:
+            d = jnp.where(d >= 2, d - 4, d)
+        part = jax.lax.dot_general(
+            d.astype(jnp.int8), w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = acc + part * (4 ** j)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def mac2_mvm_ref(w: jax.Array, x: jax.Array) -> jax.Array:
+    """Oracle for the faithful dummy-array MVM kernel: exact w @ x (int32)."""
+    return jax.lax.dot_general(
+        w.astype(jnp.int32), x.astype(jnp.int32)[:, None],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)[:, 0]

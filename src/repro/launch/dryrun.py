@@ -1,0 +1,342 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh both --out results/dryrun
+
+The XLA_FLAGS line above MUST run before any jax import (device count is
+locked at first init), which is why this module sets it at line 1-2 and why
+nothing else in the package sets it globally.
+"""
+import argparse        # noqa: E402
+import json            # noqa: E402
+import re              # noqa: E402
+import time            # noqa: E402
+import traceback       # noqa: E402
+
+import jax             # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import archs, get_config                      # noqa: E402
+from repro.launch import specs as sp                             # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.models import model as M                              # noqa: E402
+from repro.optim import adamw                                    # noqa: E402
+from repro.parallel import sharding as shd                       # noqa: E402
+
+OPT_CFG = adamw.AdamWConfig()
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+_COLL_RE = re.compile(
+    r"= (\w+)\[([\d,]*)\][^ ]* "
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic by op kind, from post-SPMD HLO.
+
+    Convention: bytes = result-shape bytes of each collective instruction
+    (per device, since compiled.as_text() is the partitioned module)."""
+    out = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out[kind] = out.get(kind, 0) + n * _DTYPE_BYTES.get(dtype, 4)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg):
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, batch, cfg), has_aux=True)(params)
+        params, opt_state, om = adamw.apply(params, opt_state, grads, OPT_CFG)
+        return params, opt_state, {"loss": loss, **parts, **om}
+    return train_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch, caches):
+        return M.prefill(params, batch, cfg, caches)
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    def decode_step(params, tokens, caches, pos):
+        return M.decode_step(params, tokens, cfg, caches, pos)
+    return decode_step
+
+
+def _slstm_scan_correction(cfg, info) -> float:
+    """sLSTM's recurrent R·h matmul runs inside an inherently-sequential
+    time scan, which even the unrolled-layers probe counts once per layer;
+    add the missing (S−1) steps analytically.  (The mamba/mLSTM chunk
+    scans' in-loop work is elementwise, ~1.5% of their matmul FLOPs —
+    left uncorrected, noted in EXPERIMENTS.md.)"""
+    n_slstm = sum(s.startswith("slstm") for s in cfg.layer_pattern) \
+        * cfg.n_periods
+    if not n_slstm or info["kind"] == "decode" or info["seq"] <= 1:
+        return 0.0
+    per_step = 2 * info["batch"] * cfg.d_model * 4 * cfg.d_model
+    mult = 4 if info["kind"] == "train" else 1   # fwd + remat + bwd(2)
+    return float(n_slstm) * (info["seq"] - 1) * per_step * mult
+
+
+# ---------------------------------------------------------------------------
+# one cell
+# ---------------------------------------------------------------------------
+
+def lower_cell(cfg, shape: str, mesh, rules=None, quant_bits: int = 0):
+    """Build the step fn for one cell and AOT-lower it on `mesh`.
+
+    rules: sharding rule set override (e.g. shd.serve_rules for the
+    inference TP profile).  quant_bits: serve with pre-quantized weights
+    (the paper's persistent-weights deployment; inference kinds only).
+    """
+    info = archs.SHAPES[shape]
+    ctx = shd.activate(mesh, rules)
+    params_s, opt_s = sp.state_specs(cfg, OPT_CFG)
+    if quant_bits and info["kind"] != "train":
+        from repro.core import bramac_linear as bl
+        qcfg = bl.QuantConfig(enabled=True, bits_w=quant_bits, bits_a=8)
+        params_s = jax.eval_shape(
+            lambda p: bl.tree_prepare_serving(p, qcfg), params_s)
+    p_sh = shd.param_shardings(params_s, ctx)
+    b_specs = sp.batch_specs(cfg, shape)
+    b_sh = sp.batch_shardings(ctx, b_specs)
+
+    if info["kind"] == "train":
+        fn = make_train_step(cfg)
+        o_sh = sp.opt_shardings(ctx, opt_s, p_sh)
+        jitted = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh),
+                         donate_argnums=(0, 1))
+        return jitted.lower(params_s, opt_s, b_specs)
+    if info["kind"] == "prefill":
+        c_specs = sp.cache_specs(cfg, info["batch"], info["seq"])
+        c_sh = sp.cache_shardings(ctx, c_specs)
+        fn = make_prefill_step(cfg)
+        jitted = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh),
+                         donate_argnums=(2,))
+        return jitted.lower(params_s, b_specs, c_specs)
+    B = info["batch"]
+    c_specs = sp.cache_specs(cfg, B, info["seq"])
+    c_sh = sp.cache_shardings(ctx, c_specs)
+    tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    rep = sp.replicated(ctx, tok)
+    fn = make_decode_step(cfg)
+    jitted = jax.jit(fn, in_shardings=(p_sh, rep, c_sh, rep),
+                     donate_argnums=(2,))
+    return jitted.lower(params_s, tok, c_specs, pos)
+
+
+def _cache_seq_rules(multi_pod):
+    r = shd.default_rules(multi_pod)
+    r["cache_layout"] = "seq"
+    return r
+
+
+def _serve_cache_seq_rules(multi_pod):
+    r = shd.serve_rules(multi_pod)
+    r["cache_layout"] = "seq"
+    return r
+
+
+VARIANTS = {
+    # name: (cfg transform, rules factory(multi_pod), serve quant bits)
+    # "baseline" pins the original cumsum dispatch: the §Perf baselines in
+    # EXPERIMENTS.md were recorded before sort became the config default.
+    "baseline": (lambda c: c.replace(moe_dispatch="cumsum"), None, 0),
+    "moe_sort": (lambda c: c.replace(moe_dispatch="sort"), None, 0),
+    "serve_tp": (lambda c: c, shd.serve_rules, 0),
+    "serve_tp_q8": (lambda c: c, shd.serve_rules, 8),
+    "serve_tp_q4": (lambda c: c, shd.serve_rules, 4),
+    "q8": (lambda c: c, None, 8),
+    "q4": (lambda c: c, None, 4),
+    "cache_seq": (lambda c: c, _cache_seq_rules, 0),
+    "cache_seq_q8": (lambda c: c, _cache_seq_rules, 8),
+    "cache_seq_q4": (lambda c: c, _cache_seq_rules, 4),
+    "cache_seq_q8_kv8": (lambda c: c.replace(quant_kv=True),
+                         _cache_seq_rules, 8),
+    "serve_cache_seq_q4": (lambda c: c, _serve_cache_seq_rules, 4),
+    "no_remat": (lambda c: c.replace(remat=False), None, 0),
+    "moe_sort_no_remat": (
+        lambda c: c.replace(moe_dispatch="sort", remat=False), None, 0),
+}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             cost_probe: bool = True, variant: str = "baseline") -> dict:
+    """Phase 1 (production): scan-over-layers lower + compile → compile
+    proof, per-device memory analysis.  Phase 2 (cost probe, single-pod):
+    layers unrolled, lower + compile → exact per-device FLOPs / bytes /
+    collective traffic (XLA cost analysis counts while-loop bodies ONCE, so
+    the scanned module undercounts by ~n_periods; the unrolled module is
+    the same computation with exact accounting)."""
+    transform, rules_fn, qbits = VARIANTS[variant]
+    cfg = transform(get_config(arch))
+    rules = rules_fn(multi_pod) if rules_fn else None
+    info = archs.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, rules, qbits)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+
+    if cost_probe:
+        cfg_u = cfg.replace(scan_layers=False)
+        t0 = time.time()
+        compiled_u = lower_cell(cfg_u, shape, mesh, rules, qbits).compile()
+        t_probe = time.time() - t0
+        ca = compiled_u.cost_analysis()
+        hlo = compiled_u.as_text()
+    else:
+        t_probe = 0.0
+        ca = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    coll = collective_bytes(hlo)
+    coll_total = sum(coll.values())
+    flops_dev = float(ca.get("flops", 0.0)) \
+        + _slstm_scan_correction(cfg, info) / chips
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+
+    # roofline terms (seconds)
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_total / ICI_BW
+
+    # MODEL_FLOPS (useful-work flops, whole step, global)
+    n_active = cfg.active_param_count()
+    if info["kind"] == "train":
+        tokens = info["batch"] * info["seq"]
+        model_flops = 6 * n_active * tokens
+    elif info["kind"] == "prefill":
+        tokens = info["batch"] * info["seq"]
+        model_flops = 2 * n_active * tokens
+    else:
+        tokens = info["batch"]
+        model_flops = 2 * n_active * tokens
+
+    hlo_flops_global = flops_dev * chips
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    shd.deactivate()
+    return {
+        "arch": arch, "shape": shape, "variant": variant,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "status": "ok", "cost_probe_unrolled": cost_probe,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "cost_probe_s": round(t_probe, 1),
+        "memory": {
+            "args_bytes_per_dev": ma.argument_size_in_bytes,
+            "output_bytes_per_dev": ma.output_size_in_bytes,
+            "temp_bytes_per_dev": ma.temp_size_in_bytes,
+            "alias_bytes_per_dev": ma.alias_size_in_bytes,
+            "peak_est_bytes_per_dev": (ma.argument_size_in_bytes
+                                       + ma.output_size_in_bytes
+                                       + ma.temp_size_in_bytes
+                                       - ma.alias_size_in_bytes),
+        },
+        "hlo_flops_per_dev": flops_dev,
+        "hlo_bytes_per_dev": bytes_dev,
+        "collective_bytes_per_dev": coll,
+        "collective_bytes_total_per_dev": coll_total,
+        "roofline": {
+            "compute_s": t_compute, "memory_s": t_memory,
+            "collective_s": t_coll, "dominant": dominant,
+            "model_flops_global": model_flops,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_ratio": model_flops / max(hlo_flops_global, 1.0),
+            "roofline_fraction": t_compute / max(
+                t_compute, t_memory, t_coll),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="both")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--probe", default="auto", choices=["auto", "on", "off"],
+                    help="unrolled cost probe: auto = single-pod only; "
+                         "off = scan-module costs (undercounts loop bodies; "
+                         "record is flagged)")
+    args = ap.parse_args()
+
+    arch_list = list(archs.FULL) if args.arch == "all" else [args.arch]
+    shape_list = list(archs.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch in arch_list:
+        for shape in shape_list:
+            for multi_pod in meshes:
+                tag = f"{arch}__{shape}__{'multipod' if multi_pod else 'pod'}"
+                if args.variant != "baseline":
+                    tag += f"__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip existing] {tag}")
+                    continue
+                if not archs.shape_applicable(arch, shape):
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "status": "skipped",
+                           "reason": "long_500k needs sub-quadratic mixing; "
+                                     "this arch is pure full-attention "
+                                     "(DESIGN.md §5)"}
+                    json.dump(rec, open(path, "w"), indent=1)
+                    print(f"[skip by design] {tag}")
+                    continue
+                print(f"[run] {tag}", flush=True)
+                try:
+                    # cost probe (unrolled) on the single-pod mesh only —
+                    # the roofline table is single-pod; multipod proves
+                    # the pod axis shards/compiles.
+                    probe = {"auto": not multi_pod, "on": True,
+                             "off": False}[args.probe]
+                    rec = run_cell(arch, shape, multi_pod,
+                                   cost_probe=probe,
+                                   variant=args.variant)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape, "status": "error",
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "error": repr(e),
+                           "trace": traceback.format_exc()[-4000:]}
+                json.dump(rec, open(path, "w"), indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" frac={r['roofline_fraction']:.2f}"
+                             f" compile={rec['compile_s']}s")
+                print(f"[done] {tag}: {status}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving launcher: batched requests through the engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
+        --requests 8 --new-tokens 12 [--quant-bits 4]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.bramac_linear import QuantConfig
+from repro.models import model as M
+from repro.runtime.serve import Engine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--quant-bits", type=int, default=0, choices=(0, 2, 4, 8))
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.quant_bits:
+        cfg = cfg.replace(quant=QuantConfig(enabled=True,
+                                            bits_w=args.quant_bits,
+                                            bits_a=args.quant_bits))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
+                                    size=int(rng.integers(4, 24))),
+                       args.new_tokens)
+            for _ in range(args.requests)]
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    done = sum(r.done for r in reqs)
+    toks = sum(len(r.out_tokens) for r in reqs)
+    print(f"{done}/{len(reqs)} requests done, {toks} tokens in {dt:.1f}s "
+          f"({toks / dt:.1f} tok/s, quant="
+          f"{'int%d' % args.quant_bits if args.quant_bits else 'off'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""ShapeDtypeStruct input stand-ins + sharding assembly for the dry-run.
+
+Everything here is allocation-free: params/opt-state/caches come from
+`jax.eval_shape` over the real init functions, so the dry-run lowers the
+exact computation the runtime executes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import archs, get_config
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+
+
+def batch_specs(cfg, shape_name: str) -> dict:
+    info = archs.SHAPES[shape_name]
+    B, S = info["batch"], info["seq"]
+    kind = info["kind"]
+    i32 = jnp.int32
+    if kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    batch = {}
+    if cfg.audio_frontend:
+        batch["frame_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                     jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return batch
+
+
+def input_specs(arch: str, shape_name: str = "train_4k",
+                opt_cfg: adamw.AdamWConfig | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the step function of
+    `arch` × `shape` — weak-type-correct, shardable, no device allocation.
+
+    train:   {params, opt_state, batch}
+    prefill: {params, batch, caches}
+    decode:  {params, tokens, caches, pos}
+    """
+    import jax.numpy as _jnp
+    cfg = get_config(arch)
+    info = archs.SHAPES[shape_name]
+    params, opt = state_specs(cfg, opt_cfg or adamw.AdamWConfig())
+    batch = batch_specs(cfg, shape_name)
+    if info["kind"] == "train":
+        return {"params": params, "opt_state": opt, "batch": batch}
+    caches = cache_specs(cfg, info["batch"], info["seq"])
+    if info["kind"] == "prefill":
+        return {"params": params, "batch": batch, "caches": caches}
+    return {"params": params, "tokens": batch["tokens"], "caches": caches,
+            "pos": jax.ShapeDtypeStruct((info["batch"],), _jnp.int32)}
+
+
+def state_specs(cfg, opt_cfg: adamw.AdamWConfig):
+    """(params, opt_state) ShapeDtypeStructs via eval_shape — no allocation."""
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params = jax.eval_shape(functools.partial(M.init_params, cfg), key)
+    opt = jax.eval_shape(functools.partial(adamw.init, cfg=opt_cfg), params)
+    return params, opt
+
+
+def cache_specs(cfg, batch: int, max_seq: int):
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, max_seq))
+
+
+# ---------------------------------------------------------------------------
+# sharding assembly
+# ---------------------------------------------------------------------------
+
+def _axes_size(ctx, ax):
+    size = 1
+    for a in ((ax,) if isinstance(ax, str) else ax):
+        size *= ctx.mesh.shape[a]
+    return size
+
+
+def batch_shardings(ctx, specs):
+    dp = ctx.rules["batch"]
+
+    def per_leaf(leaf):
+        first = dp if leaf.shape[0] % _axes_size(ctx, dp) == 0 else None
+        return NamedSharding(ctx.mesh, P(first, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree_util.tree_map(per_leaf, specs)
+
+
+def opt_shardings(ctx, opt_specs, params_shardings):
+    """m: Q8 blocks sharded over fsdp; v mirrors params; step replicated."""
+    fsdp = ctx.rules["fsdp"]
+    n = _axes_size(ctx, fsdp)
+
+    def q8_leaf(leaf):
+        first = fsdp if leaf.shape[0] % n == 0 else None
+        rest = [None] * (leaf.ndim - 1)
+        return NamedSharding(ctx.mesh, P(first, *rest))
+
+    out = {"step": NamedSharding(ctx.mesh, P())}
+    out["m"] = jax.tree_util.tree_map(q8_leaf, opt_specs["m"])
+    # v mirrors the param tree structure exactly
+    out["v"] = params_shardings
+    return out
+
+
+def cache_shardings(ctx, cache_specs_tree):
+    """Decode-state placement.  Two layouts (rules["cache_layout"]):
+
+    "feat" (baseline): batch over dp, last (feature/head) dim over `model`.
+    "seq" (§Perf iteration): batch over dp, the *sequence* dim (2) over
+    `model` — keeps each layer's attention reading only its local cache
+    slice (partial softmax reduces are tiny) instead of re-gathering the
+    whole cache per layer when the feature-dim sharding conflicts with the
+    grouped-QK einsum.
+
+    Either way, if batch doesn't divide dp (long_500k B=1), the seq dim
+    takes the dp axes instead.
+    """
+    layout = ctx.rules.get("cache_layout", "feat")
+    dp = ctx.rules["batch"]
+    dpn = _axes_size(ctx, dp)
+    tpn = ctx.mesh.shape["model"]
+
+    def per_leaf(leaf):
+        spec = [None] * leaf.ndim
+        used_dp = False
+        if leaf.ndim >= 2 and leaf.shape[1] % dpn == 0:
+            spec[1] = dp
+            used_dp = True
+        if not used_dp and leaf.ndim >= 3 and leaf.shape[2] % dpn == 0:
+            spec[2] = dp          # long-context: shard cache seq over dp
+        if layout == "seq":
+            if leaf.ndim >= 4 and spec[2] is None and \
+                    leaf.shape[2] % tpn == 0:
+                spec[2] = "model"
+            elif leaf.ndim >= 3 and leaf.shape[-1] % tpn == 0:
+                spec[-1] = "model"   # non-attention states keep feat shard
+        elif leaf.ndim >= 3 and leaf.shape[-1] % tpn == 0:
+            spec[-1] = "model"
+        return NamedSharding(ctx.mesh, P(*spec))
+
+    return jax.tree_util.tree_map(per_leaf, cache_specs_tree)
+
+
+def replicated(ctx, specs):
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(ctx.mesh, P()), specs)

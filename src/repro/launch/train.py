@@ -1,0 +1,65 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
+        --steps 50 [--data 2 --model 2] [--quant-bits 8]
+
+Uses the local devices (set XLA_FLAGS=--xla_force_host_platform_device_count=N
+in the environment to emulate a mesh on CPU); full configs target the
+production meshes via the same code path.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.bramac_linear import QuantConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.optim import adamw
+from repro.parallel import sharding as shd
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--data", type=int, default=None)
+    ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--quant-bits", type=int, default=0, choices=(0, 2, 4, 8))
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.quant_bits:
+        cfg = cfg.replace(quant=QuantConfig(enabled=True,
+                                            bits_w=args.quant_bits,
+                                            bits_a=args.quant_bits))
+    mesh = make_host_mesh(args.data, args.model)
+    shd.activate(mesh)
+    print(f"mesh {dict(mesh.shape)}  arch {cfg.name}  "
+          f"params {cfg.param_count() / 1e6:.1f}M")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=25,
+                         opt=adamw.AdamWConfig(lr=args.lr))
+    trainer = Trainer(cfg, tcfg, params)
+    trainer.restore_latest()
+    pipe = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    hist = trainer.train(pipe, args.steps)
+    if hist:
+        print(f"loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+              f"over {len(hist)} steps; straggler events: "
+              f"{len(trainer.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Mamba (selective SSM) mixer — chunked parallel scan for training,
+O(1)-state recurrent step for decode (jamba's sub-quadratic half).
+
+    x → in_proj → (x, z);  x → causal depthwise conv → SiLU
+    Δ, B, C selected from x;  h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t
+    y_t = C_t · h_t + D x_t;  out = (y ⊙ SiLU(z)) → out_proj
+
+Training runs `lax.scan` over sequence chunks with a `lax.associative_scan`
+inside each chunk: memory is O(chunk · d_inner · N) instead of
+O(S · d_inner · N), and the lowered HLO stays compact.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, he_init, init_dense
+
+
+def _dt_rank(cfg):
+    return cfg.mamba_dt_rank or -(-cfg.d_model // 16)
+
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    d_in = cfg.mamba_expand * d
+    N, K, R = cfg.mamba_d_state, cfg.mamba_d_conv, _dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    dt = cfg.compute_dtype
+    # S4D-real initialization for A
+    a_log = jnp.log(jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                     (d_in, N)))
+    return {
+        "w_in": init_dense(ks[0], d, 2 * d_in, dt),
+        "conv_w": (jax.random.normal(ks[1], (K, d_in)) / K).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "w_bc": init_dense(ks[2], d_in, 2 * N, dt),
+        "w_dt_down": init_dense(ks[3], d_in, R, dt),
+        "w_dt_up": init_dense(ks[4], R, d_in, dt),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus ≈ 1e-2
+        "a_log": a_log,
+        "d_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": init_dense(ks[5], d_in, d, dt),
+    }
+
+
+def _ssm_inputs(p, xc, cfg):
+    """Common path after conv: returns (dA, dBx, C, y_skip) in f32."""
+    N = cfg.mamba_d_state
+    bc = xc @ p["w_bc"]
+    Bm, Cm = jnp.split(bc.astype(jnp.float32), 2, axis=-1)   # (..., N)
+    dt = jax.nn.softplus(
+        (xc @ p["w_dt_down"] @ p["w_dt_up"]).astype(jnp.float32)
+        + p["dt_bias"])                                      # (..., d_in)
+    A = -jnp.exp(p["a_log"])                                 # (d_in, N)
+    dA = jnp.exp(dt[..., None] * A)                          # (..., d_in, N)
+    dBx = (dt * xc.astype(jnp.float32))[..., None] * Bm[..., None, :]
+    return dA, dBx, Cm
+
+
+def _chunk_scan(carry, chunk, p, cfg):
+    """One chunk: associative scan over time inside, carry h across chunks."""
+    h0 = carry                                  # (B, d_in, N) f32
+    xc = chunk                                  # (B, T, d_in)
+    dA, dBx, Cm = _ssm_inputs(p, xc, cfg)       # (B,T,d_in,N) ×2, (B,T,N)
+
+    def combine(a, b):
+        (A1, b1), (A2, b2) = a, b
+        return A1 * A2, A2 * b1 + b2
+
+    # prepend the carry as an initial element via the b-term of step 0
+    dBx0 = dBx.at[:, 0].add(dA[:, 0] * h0)
+    As, hs = jax.lax.associative_scan(combine, (dA, dBx0), axis=1)
+    y = jnp.einsum("btdn,btn->btd", hs, Cm)
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    return hs[:, -1], y
+
+
+def mamba_sequence(p, x, cfg, h0=None, conv0=None):
+    """x: (B, S, d) → (out (B,S,d), (h_final, conv_tail)).
+
+    The (h, conv_tail) pair is the recurrent state — this is what makes
+    long_500k decoding O(1) per token for the SSM archs.
+    """
+    B, S, d = x.shape
+    d_in = cfg.mamba_expand * d
+    K = cfg.mamba_d_conv
+    xz = dense(x, p["w_in"], cfg.quant)
+    xr, z = jnp.split(xz, 2, axis=-1)            # (B,S,d_in)
+
+    # causal depthwise conv along S (with optional tail state from decode)
+    if conv0 is None:
+        conv0 = jnp.zeros((B, K - 1, d_in), xr.dtype)
+    xpad = jnp.concatenate([conv0, xr], axis=1)
+    xc = sum(xpad[:, i:i + S] * p["conv_w"][i] for i in range(K))
+    xc = jax.nn.silu(xc + p["conv_b"])
+    conv_tail = xpad[:, -(K - 1):] if K > 1 else conv0
+
+    if h0 is None:
+        h0 = jnp.zeros((B, d_in, cfg.mamba_d_state), jnp.float32)
+
+    T = min(cfg.chunk_size, S)
+    if S % T:
+        T = S                                     # fall back to one chunk
+    nc = S // T
+    xcc = xc.reshape(B, nc, T, d_in).swapaxes(0, 1)
+    hT, ys = jax.lax.scan(
+        lambda c, ch: _chunk_scan(c, ch, p, cfg), h0, xcc)
+    y = ys.swapaxes(0, 1).reshape(B, S, d_in)
+    out = dense(y.astype(x.dtype) * jax.nn.silu(z), p["w_out"], cfg.quant)
+    return out, (hT, conv_tail)
+
+
+def mamba_step(p, x, cfg, state):
+    """Single-token decode. x: (B, 1, d); state: (h, conv_tail)."""
+    h, conv_tail = state
+    B = x.shape[0]
+    d_in = cfg.mamba_expand * cfg.d_model
+    xz = dense(x[:, 0], p["w_in"], cfg.quant)
+    xr, z = jnp.split(xz, 2, axis=-1)            # (B, d_in)
+    window = jnp.concatenate([conv_tail, xr[:, None]], axis=1)  # (B,K,d_in)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"])
+    xc = jax.nn.silu(xc + p["conv_b"])
+    dA, dBx, Cm = _ssm_inputs(p, xc, cfg)        # (B,d_in,N), (B,N)
+    h = dA * h + dBx
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + p["d_skip"] * xc.astype(jnp.float32)
+    out = dense(y.astype(x.dtype) * jax.nn.silu(z), p["w_out"], cfg.quant)
+    return out[:, None], (h, window[:, 1:])
+
+
+def init_mamba_state(cfg, batch, dtype):
+    d_in = cfg.mamba_expand * cfg.d_model
+    return (jnp.zeros((batch, d_in, cfg.mamba_d_state), jnp.float32),
+            jnp.zeros((batch, cfg.mamba_d_conv - 1, d_in), dtype))

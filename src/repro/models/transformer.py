@@ -1,0 +1,199 @@
+"""Layer stack: pattern-driven blocks, scan over periods, caches, remat.
+
+A block is `<mixer>+<ff>` (configs/base.py).  Parameters of position i in
+the repeating pattern are stacked over the `n_periods` scan axis, so a
+72-layer model lowers as one scanned period — compact HLO, fast dry-run
+compiles, and the FSDP all-gather of each period's params happens inside
+the scan (overlappable by the XLA latency-hiding scheduler).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+from repro.parallel.sharding import constrain
+
+MIXERS = ("attn", "mla", "xattn", "mamba", "mlstm", "slstm")
+FFS = ("dense", "moe", "none")
+
+
+def parse_spec(spec: str) -> tuple[str, str]:
+    mixer, ff = spec.split("+")
+    assert mixer in MIXERS and ff in FFS, spec
+    return mixer, ff
+
+
+# ---------------------------------------------------------------------------
+# per-block init
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg, spec: str):
+    mixer, ff = parse_spec(spec)
+    k1, k2 = jax.random.split(key)
+    dt = cfg.compute_dtype
+    p: dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model, dt)}
+    if mixer == "attn":
+        p["mixer"] = attn.init_gqa(k1, cfg)
+    elif mixer == "mla":
+        p["mixer"] = attn.init_mla(k1, cfg)
+    elif mixer == "xattn":
+        p["mixer"] = attn.init_xattn(k1, cfg)
+    elif mixer == "mamba":
+        p["mixer"] = mb.init_mamba(k1, cfg)
+    elif mixer == "mlstm":
+        p["mixer"] = xl.init_mlstm(k1, cfg)
+    elif mixer == "slstm":
+        p["mixer"] = xl.init_slstm(k1, cfg)
+    if ff != "none":
+        p["norm2"] = init_rmsnorm(cfg.d_model, dt)
+        p["moe" if ff == "moe" else "mlp"] = (
+            moe_mod.init_moe(k2, cfg) if ff == "moe"
+            else init_mlp(k2, cfg.d_model, cfg.d_ff, dt))
+    return p
+
+
+def init_block_cache(cfg, spec: str, batch: int, max_seq: int, dtype):
+    """Decode-time state for one block (None for stateless)."""
+    mixer, _ = parse_spec(spec)
+    if mixer == "attn":
+        return attn.init_gqa_cache(cfg, batch, max_seq, dtype)
+    if mixer == "mla":
+        return attn.init_mla_cache(cfg, batch, max_seq, dtype)
+    if mixer == "xattn":
+        return attn.init_xattn_cache(cfg, batch, dtype)
+    if mixer == "mamba":
+        return mb.init_mamba_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return xl.init_mlstm_state(cfg, batch)
+    if mixer == "slstm":
+        return xl.init_slstm_state(cfg, batch)
+    raise ValueError(mixer)
+
+
+# ---------------------------------------------------------------------------
+# per-block apply
+# ---------------------------------------------------------------------------
+
+def block_apply(p, x, cfg, spec, *, positions, vision_embeds=None,
+                cache=None, cache_pos=None):
+    """Returns (x, aux_loss, new_cache)."""
+    mixer, ff = parse_spec(spec)
+    h = rmsnorm(p["norm1"], x, cfg.norm_eps)
+    decode = cache is not None and x.shape[1] == 1
+    if mixer == "attn":
+        y, new_cache = attn.gqa(p["mixer"], h, cfg, positions, cache, cache_pos)
+    elif mixer == "mla":
+        y, new_cache = attn.mla(p["mixer"], h, cfg, positions, cache, cache_pos)
+    elif mixer == "xattn":
+        y, new_cache = attn.xattn(p["mixer"], h, cfg, vision_embeds,
+                                  cache, cache_pos)
+    elif mixer == "mamba":
+        if decode:
+            y, new_cache = mb.mamba_step(p["mixer"], h, cfg, cache)
+        else:
+            y, new_cache = mb.mamba_sequence(p["mixer"], h, cfg)
+    elif mixer == "mlstm":
+        if decode:
+            y, new_cache = xl.mlstm_step(p["mixer"], h, cfg, cache)
+        else:
+            y, new_cache = xl.mlstm_sequence(p["mixer"], h, cfg)
+    elif mixer == "slstm":
+        if decode:
+            y, new_cache = xl.slstm_step(p["mixer"], h, cfg, cache)
+        else:
+            y, new_cache = xl.slstm_sequence(p["mixer"], h, cfg)
+    x = x + y
+    aux = jnp.zeros((), jnp.float32)
+    if ff == "dense":
+        x = x + mlp(p["mlp"], rmsnorm(p["norm2"], x, cfg.norm_eps), cfg.quant)
+    elif ff == "moe":
+        y, aux = moe_mod.moe(p["moe"], rmsnorm(p["norm2"], x, cfg.norm_eps),
+                             cfg)
+        x = x + y
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg):
+    """{"pos{i}": stacked-over-periods block params}"""
+    params = {}
+    for i, spec in enumerate(cfg.layer_pattern):
+        keys = jax.random.split(jax.random.fold_in(key, i), cfg.n_periods)
+        params[f"pos{i}"] = jax.vmap(
+            lambda k: init_block(k, cfg, spec))(keys)
+    return params
+
+
+def init_stack_cache(cfg, batch, max_seq, dtype):
+    caches = {}
+    for i, spec in enumerate(cfg.layer_pattern):
+        one = init_block_cache(cfg, spec, batch, max_seq, dtype)
+        caches[f"pos{i}"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy(),
+            one)
+    return caches
+
+
+def stack_apply(params, x, cfg, *, positions, vision_embeds=None,
+                caches=None, cache_pos=None):
+    """Scan over periods. Returns (x, aux_total, new_caches)."""
+
+    def period(x, layer_in):
+        p_slice, cache_slice = layer_in
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = {}
+        for i, spec in enumerate(cfg.layer_pattern):
+            cache_i = None if cache_slice is None else cache_slice[f"pos{i}"]
+            x, aux, nc = block_apply(
+                p_slice[f"pos{i}"], x, cfg, spec, positions=positions,
+                vision_embeds=vision_embeds, cache=cache_i,
+                cache_pos=cache_pos)
+            aux_total += aux
+            if nc is not None:
+                new_caches[f"pos{i}"] = nc
+        x = constrain(x, "batch", "act_seq", None)
+        return x, (aux_total, new_caches if new_caches else None)
+
+    body = period
+    if cfg.remat:
+        body = jax.checkpoint(period,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+
+    def scan_body(carry, layer_in):
+        x, aux_acc = carry
+        x, (aux, new_caches) = body(x, layer_in)
+        return (x, aux_acc + aux), new_caches
+
+    xs = (params, caches)
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(
+            scan_body, (x, jnp.zeros((), jnp.float32)), xs)
+        return x, aux, new_caches
+
+    # unrolled (python-loop) stack: identical computation, every period in
+    # the HLO — used by the dry-run's cost probe (scan bodies are counted
+    # once by XLA cost analysis) and available as a runtime choice.
+    carry = (x, jnp.zeros((), jnp.float32))
+    out_caches = []
+    for i in range(cfg.n_periods):
+        layer_in = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, nc = scan_body(carry, layer_in)
+        out_caches.append(nc)
+    (x, aux) = carry
+    if out_caches and out_caches[0] is not None:
+        new_caches = jax.tree_util.tree_map(
+            lambda *ls: jnp.stack(ls), *out_caches)
+    else:
+        new_caches = None
+    return x, aux, new_caches

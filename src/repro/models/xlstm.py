@@ -1,0 +1,253 @@
+"""xLSTM mixers: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, inherently sequential) — arXiv:2405.04517.
+
+mLSTM cell (per head, stabilized exponential gating):
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) k_t v_tᵀ
+    n_t = (same recurrence on k_t)
+    h_t = (q_t C_t) / max(|q_t·n_t|, exp(-m_t))
+
+Training uses the chunkwise-parallel form (intra-chunk quadratic attention
++ inter-chunk (C, n, m) carry) — O(S·T) memory, compact HLO, MXU-friendly;
+`mlstm_recurrent_ref` is the step-by-step oracle used by tests.  Decode is
+the O(1)-state recurrent step (the reason xlstm runs the long_500k shape).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, init_rmsnorm, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d = cfg.d_model
+    dp = int(cfg.mlstm_proj_factor * d)
+    ks = jax.random.split(key, 8)
+    dt = cfg.compute_dtype
+    return {
+        "w_up": init_dense(ks[0], d, 2 * dp, dt),
+        "wq": init_dense(ks[1], dp, dp, dt),
+        "wk": init_dense(ks[2], dp, dp, dt),
+        "wv": init_dense(ks[3], dp, dp, dt),
+        "w_if": init_dense(ks[4], dp, 2 * cfg.num_heads, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((cfg.num_heads,)),
+                                 jnp.full((cfg.num_heads,), 3.0)]),
+        "norm": init_rmsnorm(dp, dt),
+        "w_down": init_dense(ks[5], dp, d, dt),
+    }
+
+
+def _mlstm_gates(p, xm, H):
+    gf = xm.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    logi, logf = gf[..., :H], jax.nn.log_sigmoid(gf[..., H:])
+    return logi, logf                       # (..., H)
+
+
+def _qkv(p, xm, cfg, H):
+    B, T, dp = xm.shape
+    dh = dp // H
+    q = dense(xm, p["wq"], cfg.quant).reshape(B, T, H, dh)
+    k = dense(xm, p["wk"], cfg.quant).reshape(B, T, H, dh) / (dh ** 0.5)
+    v = dense(xm, p["wv"], cfg.quant).reshape(B, T, H, dh)
+    return q, k, v
+
+
+def _mlstm_chunk(carry, inputs):
+    """One chunk of the chunkwise-parallel mLSTM (all heads batched).
+
+    carry: C (B,H,dk,dv), n (B,H,dk), m (B,H)
+    inputs: q,k,v (B,T,H,dh), logi/logf (B,T,H)
+    """
+    C, n, m = carry
+    q, k, v, logi, logf = inputs
+    B, T, H, dh = q.shape
+    lam = jnp.cumsum(logf, axis=1)                        # Λ_t inclusive (B,T,H)
+    lam_T = lam[:, -1]                                    # (B,H)
+
+    # per-token output stabilizer: max(Λ_t+m, max_{s≤t}(Λ_t−Λ_s+logi_s))
+    a = logi - lam                                        # logi_s − Λ_s
+    intra_max = jax.lax.cummax(a, axis=1)
+    m_out = jnp.maximum(lam + m[:, None], lam + intra_max)  # (B,T,H)
+
+    # intra-chunk quadratic term: w[t,s] = exp(Λ_t−Λ_s+logi_s−m_out_t), s≤t
+    scores = jnp.einsum("bthd,bshd->bhts", q, k)          # (B,H,T,T)
+    lam_h = lam.transpose(0, 2, 1)                        # (B,H,T)
+    logw = (lam_h[:, :, :, None] - lam_h[:, :, None, :]
+            + logi.transpose(0, 2, 1)[:, :, None, :])     # (B,H,T,S)
+    m_out_h = m_out.transpose(0, 2, 1)                    # (B,H,T)
+    tri = jnp.tril(jnp.ones((T, T), bool))
+    w = jnp.where(tri, jnp.exp(logw - m_out_h[..., None]), 0.0)
+    ws = w * scores
+    h_intra = jnp.einsum("bhts,bshd->bthd", ws, v)
+    n_intra = jnp.sum(ws, axis=-1).transpose(0, 2, 1)     # (B,T,H)
+
+    # contribution from carried state
+    w_prev = jnp.exp(lam + m[:, None] - m_out)            # (B,T,H)
+    h_prev = jnp.einsum("bthd,bhde->bthe", q, C) * w_prev[..., None]
+    n_prev = jnp.einsum("bthd,bhd->bth", q, n) * w_prev
+
+    denom = jnp.maximum(jnp.abs(n_intra + n_prev), jnp.exp(-m_out))
+    h = (h_intra + h_prev) / denom[..., None]
+
+    # state update (fold the whole chunk into (C, n, m))
+    m_new = jnp.maximum(lam_T + m, lam_T + jnp.max(a, axis=1))
+    decay = jnp.exp(lam_T + m - m_new)                    # (B,H)
+    wk = jnp.exp(lam_T[:, None] - lam + logi - m_new[:, None])  # (B,T,H)
+    C_new = decay[..., None, None] * C + jnp.einsum(
+        "bthd,bthe->bhde", k * wk[..., None], v)
+    n_new = decay[..., None] * n + jnp.einsum("bth,bthd->bhd", wk, k)
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_sequence(p, x, cfg, state=None):
+    """x: (B,S,d) → (out, state). state: (C, n, m) per head."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dp = int(cfg.mlstm_proj_factor * d)
+    dh = dp // H
+    up = dense(x, p["w_up"], cfg.quant)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v = _qkv(p, xm, cfg, H)
+    logi, logf = _mlstm_gates(p, xm, H)
+
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    T = min(cfg.chunk_size, S)
+    if S % T:
+        T = S
+    nc = S // T
+
+    def split(a):
+        return a.reshape(B, nc, T, *a.shape[2:]).swapaxes(0, 1)
+
+    carry, hs = jax.lax.scan(
+        _mlstm_chunk, state,
+        tuple(split(a) for a in (q, k, v, logi, logf)))
+    h = hs.swapaxes(0, 1).reshape(B, S, H * dh).astype(x.dtype)
+    out = rmsnorm(p["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return dense(out, p["w_down"], cfg.quant), carry
+
+
+def mlstm_step(p, x, cfg, state):
+    """Single-token decode; O(1) state update."""
+    (C, n, m) = state
+    B = x.shape[0]
+    H = cfg.num_heads
+    dp = int(cfg.mlstm_proj_factor * cfg.d_model)
+    dh = dp // H
+    up = dense(x[:, 0], p["w_up"], cfg.quant)
+    xm, z = jnp.split(up, 2, axis=-1)
+    q, k, v = _qkv(p, xm[:, None], cfg, H)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                   # (B,H,dh)
+    logi, logf = _mlstm_gates(p, xm[:, None], H)
+    logi, logf = logi[:, 0], logf[:, 0]                   # (B,H)
+
+    m_new = jnp.maximum(logf + m, logi)
+    f_s = jnp.exp(logf + m - m_new)
+    i_s = jnp.exp(logi - m_new)
+    C = f_s[..., None, None] * C + i_s[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = f_s[..., None] * n + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, H * dh).astype(x.dtype)
+    out = rmsnorm(p["norm"], h, cfg.norm_eps) * jax.nn.silu(z)
+    return dense(out, p["w_down"], cfg.quant)[:, None], (C, n, m_new)
+
+
+def init_mlstm_state(cfg, batch):
+    H = cfg.num_heads
+    dp = int(cfg.mlstm_proj_factor * cfg.d_model)
+    dh = dp // H
+    return (jnp.zeros((batch, H, dh, dh), jnp.float32),
+            jnp.zeros((batch, H, dh), jnp.float32),
+            jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def mlstm_recurrent_ref(p, x, cfg):
+    """Step-by-step oracle (tests only)."""
+    B, S, _ = x.shape
+    state = init_mlstm_state(cfg, B)
+    outs = []
+    for t in range(S):
+        o, state = mlstm_step(p, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    dp = int(cfg.slstm_proj_factor * d)
+    ks = jax.random.split(key, 7)
+    dt = cfg.compute_dtype
+    return {
+        "w_gates": init_dense(ks[0], d, 4 * d, dt),       # z, i, f, o
+        "r_gates": init_dense(ks[1], d, 4 * d, dt),       # recurrent
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "norm": init_rmsnorm(d, dt),
+        "w_up": init_dense(ks[2], d, 2 * dp, dt),
+        "w_down": init_dense(ks[3], dp, d, dt),
+    }
+
+
+def _slstm_cell(p, wx_t, hcnm, cfg):
+    """wx_t: the input projection W·x_t, precomputed outside the scan (the
+    big matmul is hoisted and batched over the sequence — MXU-friendly;
+    only the recurrent R·h_{t-1} stays sequential)."""
+    h, c, n, m = hcnm                                     # (B,d) f32 each
+    g = (wx_t.astype(jnp.float32)
+         + h.astype(jnp.float32) @ p["r_gates"].astype(jnp.float32)
+         + p["b_gates"])
+    z, gi, gf, go = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(z)
+    logf = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(logf + m, gi)
+    i_s = jnp.exp(gi - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = jax.nn.sigmoid(go) * (c / jnp.maximum(n, 1e-6))
+    return (h_new, c, n, m_new)
+
+
+def slstm_sequence(p, x, cfg, state=None):
+    B, S, d = x.shape
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    wx = dense(x, p["w_gates"], cfg.quant)        # hoisted input projection
+
+    def step(carry, wx_t):
+        new = _slstm_cell(p, wx_t, carry, cfg)
+        return new, new[0]
+
+    state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    h = rmsnorm(p["norm"], h, cfg.norm_eps)
+    up = dense(h, p["w_up"], cfg.quant)
+    a, b = jnp.split(up, 2, axis=-1)
+    return dense(jax.nn.gelu(a) * b, p["w_down"], cfg.quant), state
+
+
+def slstm_step(p, x, cfg, state):
+    wx = dense(x[:, 0], p["w_gates"], cfg.quant)
+    state = _slstm_cell(p, wx, state, cfg)
+    h = rmsnorm(p["norm"], state[0][:, None].astype(x.dtype), cfg.norm_eps)
+    up = dense(h, p["w_up"], cfg.quant)
+    a, b = jnp.split(up, 2, axis=-1)
+    return dense(jax.nn.gelu(a) * b, p["w_down"], cfg.quant), state
+
+
+def init_slstm_state(cfg, batch):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return (z, z, z, jnp.full((batch, d), -1e30, jnp.float32))

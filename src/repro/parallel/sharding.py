@@ -1,0 +1,196 @@
+"""Logical-axis sharding: DP / FSDP(ZeRO-3) / TP / EP / SP rules.
+
+Models call `constrain(x, *logical_axes)`; the launcher activates a mesh +
+rule set before tracing.  With no activation (unit tests, single CPU) every
+constraint is a no-op, so model code never depends on a mesh.
+
+Rule sets map logical axis names → physical mesh axes:
+
+  batch    : data-parallel batch dim            → ("pod", "data")
+  fsdp     : ZeRO-3 parameter shard dim         → ("pod", "data")
+  tp       : tensor-parallel (heads/ff/vocab)   → "model"
+  act_seq  : sequence-parallel residual stream  → "model"
+  kv_feat  : decode KV-cache feature shard      → "model"
+
+Parameter placement is name-based: `param_specs(params)` walks the pytree
+and assigns (fsdp, tp) on the (in, out) dims of column-parallel weights and
+(tp, fsdp) on row-parallel ones, experts on (tp→EP, fsdp, ·), everything
+else replicated.  Stacked layer params get a leading None for the period
+axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: dict
+
+    def resolve(self, *logical) -> P:
+        axes = []
+        for name in logical:
+            if name is None:
+                axes.append(None)
+                continue
+            phys = self.rules.get(name)
+            axes.append(phys)
+        return P(*axes)
+
+
+_ACTIVE: ShardingCtx | None = None
+
+
+def default_rules(multi_pod: bool) -> dict:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return {"batch": dp, "fsdp": dp, "tp": "model",
+            "act_seq": "model", "kv_feat": "model", "expert": "model"}
+
+
+def serve_rules(multi_pod: bool) -> dict:
+    """Inference sharding profile (§Perf iteration): weights tensor-parallel
+    over `model` only, replicated across the DP axes — no per-token FSDP
+    all-gathers; batch/caches still split over DP."""
+    r = default_rules(multi_pod)
+    r["fsdp"] = None
+    return r
+
+
+def activate(mesh: Mesh, rules: dict | None = None) -> ShardingCtx:
+    global _ACTIVE
+    multi_pod = "pod" in mesh.axis_names
+    _ACTIVE = ShardingCtx(mesh, rules or default_rules(multi_pod))
+    return _ACTIVE
+
+
+def deactivate() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active() -> ShardingCtx | None:
+    return _ACTIVE
+
+
+def constrain(x: jax.Array, *logical) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op when inactive).
+
+    Axes whose size doesn't divide the assigned mesh axes are silently
+    dropped to None (e.g. 8 KV heads on a 16-way model axis)."""
+    ctx = _ACTIVE
+    if ctx is None:
+        return x
+    spec = ctx.resolve(*logical)
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax is None:
+            fixed.append(None)
+            continue
+        size = 1
+        for a in ((ax,) if isinstance(ax, str) else ax):
+            size *= ctx.mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*fixed)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs (name-based rules)
+# ---------------------------------------------------------------------------
+
+# (regex on the dot-joined path) -> logical axes per trailing dims.
+# Matching is last-rule-wins; dims are right-aligned (leading stack/period
+# axes get None automatically).
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"embedding$",              ("tp", "fsdp")),
+    (r"unembed$",                ("fsdp", "tp")),
+    (r"\b(wq|wk|wv)$",           ("fsdp", "tp")),
+    (r"\bwo$",                   ("tp", "fsdp")),
+    (r"\b(w_gate|w_up)$",        ("fsdp", "tp")),
+    (r"\bw_down$",               ("tp", "fsdp")),
+    (r"\brouter$",               (None, None)),
+    # MoE experts (E, d, f) / (E, f, d): EP on experts + FSDP on d
+    (r"moe.*\b(w_gate|w_up)$",   ("expert", "fsdp", None)),
+    (r"moe.*\bw_down$",          ("expert", None, "fsdp")),
+    # MLA
+    (r"\bw_dq$",                 ("fsdp", None)),
+    (r"\bw_uq$",                 (None, "tp")),
+    (r"\bw_dkv$",                ("fsdp", None)),
+    (r"\bw_kr$",                 (None, None)),
+    (r"\b(w_uk|w_uv)$",          (None, "tp")),
+    # mamba
+    (r"\bw_in$",                 ("fsdp", "tp")),
+    (r"\bconv_w$",               (None, "tp")),
+    (r"\b(conv_b|d_skip|dt_bias)$", ("tp",)),
+    (r"\ba_log$",                ("tp", None)),
+    (r"\bw_bc$",                 ("tp", None)),
+    (r"\bw_dt_down$",            ("tp", None)),
+    (r"\bw_dt_up$",              (None, "tp")),
+    # xlstm
+    (r"\bw_if$",                 (None, None)),
+    (r"\b(w_gates|r_gates)$",    ("fsdp", "tp")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return ".".join(parts)
+
+
+def spec_for(path_str: str, ndim: int) -> tuple:
+    # QuantizedTensor leaves: the .values/.scale arrays inherit the parent
+    # weight's rule (right-aligned; non-divisible dims drop to None later).
+    path_str = re.sub(r"\.(values|scale)$", "", path_str)
+    chosen = None
+    for pattern, axes in _PARAM_RULES:
+        if re.search(pattern, path_str):
+            chosen = axes
+    if chosen is None:
+        return (None,) * ndim
+    pad = ndim - len(chosen)
+    if pad < 0:        # param has fewer dims than rule (shouldn't happen)
+        return (None,) * ndim
+    return (None,) * pad + tuple(chosen)
+
+
+def param_specs(params: Any) -> Any:
+    """Logical spec pytree mirroring `params`."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(_path_str(path), leaf.ndim), params)
+
+
+def param_shardings(params: Any, ctx: ShardingCtx | None = None) -> Any:
+    """NamedSharding pytree for jit in_shardings (divisibility-checked)."""
+    ctx = ctx or _ACTIVE
+    specs = param_specs(params)
+
+    def to_sharding(leaf, logical):
+        fixed = []
+        for dim, name in zip(leaf.shape, logical):
+            if name is None:
+                fixed.append(None)
+                continue
+            ax = ctx.rules.get(name)
+            if ax is None:
+                fixed.append(None)
+                continue
+            size = 1
+            for a in ((ax,) if isinstance(ax, str) else ax):
+                size *= ctx.mesh.shape[a]
+            fixed.append(ax if dim % size == 0 else None)
+        return NamedSharding(ctx.mesh, P(*fixed))
+
+    return jax.tree_util.tree_map(to_sharding, params, specs)

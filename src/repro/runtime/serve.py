@@ -1,0 +1,139 @@
+"""Batched serving engine: slot-based continuous batching, greedy sampling,
+optional BRAMAC-quantized weights (the paper's inference deployment mode).
+
+The engine owns a fixed pool of `num_slots` sequences sharing one KV cache.
+Requests are admitted into free slots (prefill writes the slot's cache
+rows), and a single jit'd decode step advances *all* active slots each
+tick — finished or empty slots are masked.  This is the tiling-based
+inference pattern of §VI-D: weights stay resident while inputs stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg, params, num_slots: int, max_seq: int,
+                 eos_id: int | None = None):
+        self.cfg, self.params = cfg, params
+        self.num_slots, self.max_seq = num_slots, max_seq
+        self.eos_id = eos_id
+        self.caches = M.init_cache(cfg, num_slots, max_seq)
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self.positions = np.zeros((num_slots,), np.int32)
+        self.budgets = np.zeros((num_slots,), np.int32)
+        self.last_tok = np.zeros((num_slots,), np.int32)
+        self._queue: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, c, q: M.decode_step(p, t, cfg, c, q))
+        # prefill is jit'd per prompt length (padded to buckets of 16);
+        # recurrent mixers (mamba/xlstm) can't skip padding in their state,
+        # so those archs prefill at exact length (bucket = 1)
+        recurrent = any(m in spec for spec in cfg.layer_pattern
+                        for m in ("mamba", "mlstm", "slstm"))
+        self._bucket_q = 1 if recurrent else 16
+        self._prefills: dict[int, Any] = {}
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int = 16) -> Request:
+        req = Request(uid=len(self._queue), prompt=np.asarray(prompt,
+                                                              np.int32),
+                      max_new_tokens=max_new_tokens)
+        self._queue.append(req)
+        return req
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefills:
+            cfg = self.cfg
+
+            def one(params, tokens, true_len, caches):
+                """Prefill ONE prompt (B=1), then scatter into its slot.
+                Prompts are padded to a length bucket; logits are read at
+                the true last position (padding rows in the cache get
+                overwritten as decode advances)."""
+                # cache leaves are (n_periods, B, ...) — slice the batch dim
+                c1 = jax.tree_util.tree_map(lambda a: a[:, :1], caches)
+                pos0 = jnp.zeros((1,), jnp.int32)
+                logits, _, c1 = M.forward(params, {"tokens": tokens[None]},
+                                          cfg, caches=c1, cache_pos=pos0)
+                return logits[0, true_len - 1], c1
+
+            self._prefills[plen] = jax.jit(one)
+        return self._prefills[plen]
+
+    def _admit(self):
+        for slot in range(self.num_slots):
+            if self.slot_req[slot] is None and self._queue:
+                req = self._queue.pop(0)
+                plen = _bucket(len(req.prompt), self._bucket_q)
+                padded = np.zeros((plen,), np.int32)
+                padded[:len(req.prompt)] = req.prompt
+                last_logits, c1 = self._prefill_fn(plen)(
+                    self.params, jnp.asarray(padded),
+                    jnp.int32(len(req.prompt)), self.caches)
+                # scatter the B=1 cache rows into this slot (batch is dim 1)
+                self.caches = jax.tree_util.tree_map(
+                    lambda full, one: full.at[:, slot].set(one[:, 0]),
+                    self.caches, c1)
+                tok = int(jnp.argmax(last_logits))
+                req.out_tokens.append(tok)
+                self.slot_req[slot] = req
+                self.positions[slot] = len(req.prompt)
+                self.budgets[slot] = req.max_new_tokens - 1
+                self.last_tok[slot] = tok
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit + one decode for all active slots."""
+        self._admit()
+        active = np.array([r is not None for r in self.slot_req])
+        if not active.any():
+            return False
+        toks = jnp.asarray(self.last_tok)[:, None]
+        pos = jnp.asarray(self.positions)
+        logits, self.caches = self._decode(self.params, toks, self.caches,
+                                           pos)
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.positions[slot] += 1
+            if self.budgets[slot] > 0:
+                req.out_tokens.append(int(nxt[slot]))
+                self.last_tok[slot] = nxt[slot]
+                self.budgets[slot] -= 1
+                if (self.eos_id is not None
+                        and nxt[slot] == self.eos_id):
+                    self.budgets[slot] = 0
+            if self.budgets[slot] <= 0 or \
+                    self.positions[slot] >= self.max_seq - 1:
+                req.done = True
+                self.slot_req[slot] = None
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.step() and not self._queue:
+                break
+
+
+def _bucket(n: int, q: int = 16) -> int:
+    if q == 1:
+        return n
+    return max(q, ((n + q - 1) // q) * q)

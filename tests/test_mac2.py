@@ -1,0 +1,74 @@
+"""Algorithm 1 (hybrid bit-serial & bit-parallel MAC2) — exactness tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mac2 as m
+from repro.core.quant import qrange
+
+jax.config.update("jax_platform_name", "cpu")
+
+BITS = [2, 4, 8]
+
+
+def rand_ints(rng, bits, shape, signed=True):
+    lo, hi = qrange(bits)
+    if not signed:
+        lo, hi = 0, (1 << bits) - 1
+    return rng.integers(lo, hi + 1, size=shape, dtype=np.int32)
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("signed", [True, False])
+def test_mac2_exhaustive_small(bits, signed):
+    """2-bit and 4-bit: exhaustive over all (w1,w2,i1,i2) combos; 8-bit sampled."""
+    lo, hi = qrange(bits)
+    if not signed:
+        lo, hi = 0, (1 << bits) - 1
+    if bits <= 4:
+        vals = np.arange(lo, hi + 1, dtype=np.int32)
+    else:
+        vals = np.array([lo, lo + 1, -3, -1, 0, 1, 2, 77, hi - 1, hi] if signed
+                        else [0, 1, 2, 77, 128, 200, hi], dtype=np.int32)
+    W1, W2, I1, I2 = np.meshgrid(vals, vals, vals, vals, indexing="ij")
+    got = m.mac2(jnp.asarray(W1.ravel()), jnp.asarray(W2.ravel()),
+                 jnp.asarray(I1.ravel()), jnp.asarray(I2.ravel()),
+                 bits=bits, signed_inputs=signed)
+    want = W1.ravel() * I1.ravel() + W2.ravel() * I2.ravel()
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 2**31 - 1),
+       rows=st.integers(1, 40))
+def test_mac2_lanes_property(bits, seed, rows):
+    """Vectorized lanes (the 160-bit SIMD row) match the integer oracle."""
+    rng = np.random.default_rng(seed)
+    w1 = rand_ints(rng, bits, (rows,))
+    w2 = rand_ints(rng, bits, (rows,))
+    i1, i2 = rand_ints(rng, bits, (2,))
+    got = m.mac2(jnp.asarray(w1), jnp.asarray(w2), int(i1), int(i2), bits=bits)
+    np.testing.assert_array_equal(np.asarray(got), w1 * i1 + w2 * i2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 2**31 - 1),
+       rows=st.integers(1, 16), colpairs=st.integers(1, 32))
+def test_mac2_mvm_property(bits, seed, rows, colpairs):
+    """Chained MAC2s with in-place accumulation == w @ x (paper Fig 2)."""
+    rng = np.random.default_rng(seed)
+    cols = 2 * colpairs
+    w = rand_ints(rng, bits, (rows, cols))
+    x = rand_ints(rng, bits, (cols,))
+    got = m.mac2_mvm(jnp.asarray(w), jnp.asarray(x), bits=bits)
+    np.testing.assert_array_equal(np.asarray(got), w @ x)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_accumulator_headroom(bits):
+    """§III-C2: lane width 8/16/32 holds a single MAC2 (needs ≤ 2n+1 bits)."""
+    lo, hi = qrange(bits)
+    worst = 2 * lo * lo  # max |W*I| sum magnitude
+    assert abs(worst) < 2 ** (m.lane_width(bits) - 1)

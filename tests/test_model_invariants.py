@@ -1,0 +1,160 @@
+"""Property tests on the model-zoo's structural invariants:
+
+  * chunkwise-parallel mLSTM == step-by-step recurrent mLSTM
+  * chunked mamba scan == single-chunk scan == step-by-step decode
+  * capacity MoE dispatch == dense all-experts reference when no drops
+  * sLSTM sequence == step-by-step decode
+  * stack with scan_layers=True == unrolled stack
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import mamba as mb
+from repro.models import model as M
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+
+jax.config.update("jax_platform_name", "cpu")
+jax.config.update("jax_enable_x64", False)
+
+
+def _xl_cfg(chunk):
+    return get_config("xlstm-1.3b", smoke=True).replace(chunk_size=chunk)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([2, 4, 8]),
+       S=st.sampled_from([8, 16]))
+def test_mlstm_chunkwise_equals_recurrent(seed, chunk, S):
+    cfg = _xl_cfg(chunk)
+    key = jax.random.PRNGKey(seed)
+    p = xl.init_mlstm(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, S, cfg.d_model),
+                          jnp.float32)
+    seq, _ = xl.mlstm_sequence(p, x, cfg)
+    rec = xl.mlstm_recurrent_ref(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(rec),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), chunk=st.sampled_from([2, 4, 16]))
+def test_mamba_chunked_equals_stepwise(seed, chunk):
+    cfg = get_config("jamba-1.5-large-398b", smoke=True).replace(
+        chunk_size=chunk)
+    key = jax.random.PRNGKey(seed)
+    p = mb.init_mamba(key, cfg)
+    S = 16
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, S, cfg.d_model),
+                          jnp.float32)
+    seq, (hT, tail) = mb.mamba_sequence(p, x, cfg)
+
+    state = mb.init_mamba_state(cfg, 2, x.dtype)
+    outs = []
+    for t in range(S):
+        o, state = mb.mamba_step(p, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(seq), np.asarray(step),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(hT), np.asarray(state[0]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_slstm_sequence_equals_stepwise(seed):
+    cfg = _xl_cfg(8)
+    key = jax.random.PRNGKey(seed)
+    p = xl.init_slstm(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    seq, _ = xl.slstm_sequence(p, x, cfg)
+    state = xl.init_slstm_state(cfg, 2)
+    outs = []
+    for t in range(8):
+        o, state = xl.slstm_step(p, x[:, t:t + 1], cfg, state)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(seq),
+                               np.asarray(jnp.concatenate(outs, 1)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), E=st.sampled_from([4, 8]),
+       k=st.sampled_from([1, 2]))
+def test_moe_capacity_dispatch_exact_when_no_drops(seed, E, k):
+    cfg = get_config("dbrx-132b", smoke=True).replace(
+        num_experts=E, experts_per_token=k)
+    key = jax.random.PRNGKey(seed)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    # capacity_factor = E/k guarantees C = T*k/E * E/k = T — no drops ever
+    out, aux = moe_mod.moe(p, x, cfg, capacity_factor=E / k)
+    want = moe_mod.moe_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), E=st.sampled_from([4, 8, 16]))
+def test_moe_sort_dispatch_equals_cumsum(seed, E):
+    """The §Perf sort-based rank-in-expert == the baseline cumsum ranks."""
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(0, E, size=200, dtype=np.int32))
+    onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)
+    pos_cumsum = jnp.take_along_axis(jnp.cumsum(onehot, 0) - onehot,
+                                     a[:, None], axis=1)[:, 0]
+    pos_sort = moe_mod._rank_in_expert_sort(a, E)
+    np.testing.assert_array_equal(np.asarray(pos_sort),
+                                  np.asarray(pos_cumsum))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_moe_sort_dispatch_full_layer(seed):
+    cfg = get_config("dbrx-132b", smoke=True)
+    key = jax.random.PRNGKey(seed)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    base, _ = moe_mod.moe(p, x, cfg, capacity_factor=2.0)
+    fast, _ = moe_mod.moe(p, x, cfg.replace(moe_dispatch="sort"),
+                          capacity_factor=2.0)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(fast),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_moe_capacity_drops_bounded():
+    """With cf=1.0, outputs differ from reference only on dropped tokens
+    (which fall back to the residual path — zeros here)."""
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out, _ = moe_mod.moe(p, x, cfg, capacity_factor=1.0)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "jamba-1.5-large-398b",
+                                  "xlstm-1.3b"])
+def test_scan_equals_unrolled_stack(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                          cfg.vocab_size)}
+    a, _, _ = M.forward(params, batch, cfg)
+    b, _, _ = M.forward(params, batch, cfg.replace(scan_layers=False))
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,174 @@
+"""Validation of the cycle/throughput/area models against the paper's claims."""
+import math
+
+import pytest
+
+from repro.core import arch_models as am
+from repro.core import gemv_model as gm
+from repro.core.efsm import BRAMAC_1DA, BRAMAC_2SA
+
+
+# --- Table II -------------------------------------------------------------
+
+def test_mac2_latencies_exact():
+    assert [BRAMAC_2SA.mac2_latency(b) for b in (2, 4, 8)] == [5, 7, 11]
+    assert [BRAMAC_1DA.mac2_latency(b) for b in (2, 4, 8)] == [3, 4, 6]
+
+
+def test_macs_in_parallel_exact():
+    assert [BRAMAC_2SA.macs_in_parallel(b) for b in (2, 4, 8)] == [80, 40, 20]
+    assert [BRAMAC_1DA.macs_in_parallel(b) for b in (2, 4, 8)] == [40, 20, 10]
+
+
+def test_max_dot_product_sizes_exact():
+    # §IV-C: 16/256/2048 MACs before accumulator readout
+    for v in (BRAMAC_2SA, BRAMAC_1DA):
+        assert [v.max_dot_product_macs(b) for b in (2, 4, 8)] == [16, 256, 2048]
+
+
+def test_readout_busy_cycles_exact():
+    assert BRAMAC_2SA.readout_busy_cycles() == 8
+    assert BRAMAC_1DA.readout_busy_cycles() == 4
+
+
+def test_port_busy_cycles():
+    assert BRAMAC_2SA.port_busy_per_mac2 == 2
+    assert BRAMAC_1DA.port_busy_per_mac2 == 1
+
+
+# --- Fig 9 ----------------------------------------------------------------
+
+PAPER_BOOSTS = {(BRAMAC_2SA.name, 2): 2.6, (BRAMAC_2SA.name, 4): 2.3,
+                (BRAMAC_2SA.name, 8): 1.9, (BRAMAC_1DA.name, 2): 2.1,
+                (BRAMAC_1DA.name, 4): 2.0, (BRAMAC_1DA.name, 8): 1.7}
+
+
+@pytest.mark.parametrize("variant", [BRAMAC_2SA, BRAMAC_1DA])
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_peak_throughput_boosts(variant, bits):
+    got = am.throughput_boost(bits, variant)
+    want = PAPER_BOOSTS[(variant.name, bits)]
+    assert abs(got - want) / want < 0.05, (got, want)
+
+
+def test_bramac_outperforms_ccb_comefa():
+    """Fig 9: BRAMAC throughput > CCB/CoMeFa at every precision."""
+    for bits in (2, 4, 8):
+        b2 = am.bram_throughput(BRAMAC_2SA, bits)
+        b1 = am.bram_throughput(BRAMAC_1DA, bits)
+        for rival in (am.CCB, am.COMEFA_D, am.COMEFA_A):
+            assert b2 > am.bram_throughput(rival, bits)
+            assert b1 > am.bram_throughput(rival, bits)
+
+
+# --- Fig 10 ---------------------------------------------------------------
+
+def test_utilization_bramac_100pct_at_supported():
+    for p in (2, 4, 8):
+        assert am.bramac_utilization(p) == 1.0
+
+
+def test_utilization_advantage():
+    adv = am.utilization_advantage()
+    assert abs(adv["vs_ccb"] - 1.3) < 0.12        # paper: 1.3x
+    assert abs(adv["vs_comefa"] - 1.1) < 0.08     # paper: 1.1x
+
+
+# --- Fig 7 ----------------------------------------------------------------
+
+def test_adder_study():
+    d_rca = am.adder_delay_ps("RCA", 32)
+    d_cba = am.adder_delay_ps("CBA", 32)
+    d_cla = am.adder_delay_ps("CLA", 32)
+    assert abs(d_rca / d_cba - 2.8) < 0.05        # paper: 2.8x
+    assert abs(d_rca / d_cla - 2.5) < 0.05        # paper: 2.5x
+    # CLA chosen: fastest-but-power-hungry CBA vs slow RCA trade-off
+    assert am.ADDERS["CBA"]["power_uw"] > am.ADDERS["CLA"]["power_uw"]
+    assert am.ADDERS["CLA"]["power_uw"] > am.ADDERS["RCA"]["power_uw"]
+
+
+# --- Fig 11 ---------------------------------------------------------------
+
+PAPER_GEMV = {("persistent", 2): 3.3, ("persistent", 4): 2.8,
+              ("persistent", 8): 2.4, ("nonpersistent", 2): 4.1,
+              ("nonpersistent", 4): 3.4, ("nonpersistent", 8): 2.8}
+
+
+def test_gemv_max_speedups():
+    got = gm.max_speedups()
+    for key, want in PAPER_GEMV.items():
+        assert abs(got[key] - want) / want < 0.15, (key, got[key], want)
+
+
+def test_gemv_trends():
+    # speedup decreases with precision (paper §VI-C)
+    for persistent in (True, False):
+        tag = "persistent" if persistent else "nonpersistent"
+        ms = gm.max_speedups()
+        assert ms[(tag, 2)] > ms[(tag, 4)] > ms[(tag, 8)]
+    # non-persistent > persistent at same precision (eFSM tiling advantage)
+    ms = gm.max_speedups()
+    for b in (2, 4, 8):
+        assert ms[("nonpersistent", b)] > ms[("persistent", b)]
+    # vectorization efficiency: R=160 (perfect) beats R=64 (80%) at 2-bit
+    g = gm.speedup_grid(2, True)
+    assert g[(160, 128)] > g[(64, 128)]
+    # packing: CCB amortizes reductions at large C → lower speedup at C=480
+    g8 = gm.speedup_grid(8, False)
+    assert g8[(160, 128)] > g8[(160, 480)]
+
+
+def test_bramac_gemv_cycle_structure():
+    c = gm.bramac_gemv(BRAMAC_1DA, 160, 128, 4)
+    # 16 tiles x (64 MAC2 x 4 cycles + 1 drain x 4) + 2 initial copy cycles
+    assert c.total_persistent == 16 * (64 * 4 + 4) + 2
+    assert c.load == math.ceil(160 * 128 * 4 / 40)
+
+
+# --- Fig 13 / Table III ----------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dla_results():
+    from repro.core.dla_model import average_speedups, case_study
+    res = case_study()
+    return res, average_speedups(res)
+
+
+def test_dla_speedup_ranges(dla_results):
+    _, avg = dla_results
+    # paper: AlexNet 2.05x/1.7x; ResNet-34 1.33x/1.52x.  Our DSE model
+    # reproduces AlexNet and ResNet-1DA within ~12%; ResNet-2SA finds a
+    # stronger configuration than the paper's (see EXPERIMENTS.md §Fig13).
+    assert abs(avg[("alexnet", "BRAMAC-2SA")]["speedup"] - 2.05) < 0.25
+    assert abs(avg[("alexnet", "BRAMAC-1DA")]["speedup"] - 1.70) < 0.25
+    assert abs(avg[("resnet34", "BRAMAC-1DA")]["speedup"] - 1.52) < 0.25
+    assert avg[("resnet34", "BRAMAC-2SA")]["speedup"] > 1.33
+
+
+def test_dla_dsp_formula_matches_table3():
+    """The DSP model reproduces Table III's DSP counts exactly."""
+    from repro.core.dla_model import dsp_count
+    # (qvec1, cvec, kvec, bits) -> DSPs from Table III
+    rows = [((2, 16, 96), 2, 1152), ((3, 16, 32), 4, 1152),
+            ((3, 12, 24), 8, 1296), ((4, 12, 72), 2, 1296),
+            ((3, 8, 64), 4, 1152), ((3, 4, 64), 8, 1152),
+            ((1, 24, 140), 2, 1260), ((1, 16, 100), 4, 1200),
+            ((2, 10, 50), 8, 1500), ((2, 16, 100), 2, 1200)]
+    for (q, c, k), bits, want in rows:
+        assert dsp_count(q, c, k, bits) == want, (q, c, k, bits)
+
+
+def test_dla_resource_budgets(dla_results):
+    res, _ = dla_results
+    for row in res.values():
+        for name, (cfg, stats) in row.items():
+            assert stats["dsps"] <= 1518
+            assert stats["brams"] <= 2423
+
+
+def test_dla_bramac_perf_per_area_gain(dla_results):
+    """Fig 13c: DLA-BRAMAC gains performance per utilized area (>= ~1x)."""
+    res, _ = dla_results
+    for (model, bits), row in res.items():
+        for vname in ("BRAMAC-2SA", "BRAMAC-1DA"):
+            assert row[vname][1]["perf_per_area"] > 0.95, (model, bits, vname)

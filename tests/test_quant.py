@@ -1,0 +1,70 @@
+"""Quantization, packing, and digit-decomposition invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as q
+
+BITS = [2, 4, 8]
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(bits, seed):
+    rng = np.random.default_rng(seed)
+    lo, hi = q.qrange(bits)
+    x = rng.integers(lo, hi + 1, size=(5, 16), dtype=np.int8)
+    packed = q.pack_bits(jnp.asarray(x), bits)
+    assert packed.shape[-1] == 16 // (8 // bits)
+    out = q.unpack(packed, bits, x.shape)
+    np.testing.assert_array_equal(np.asarray(out), x)
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 2**31 - 1),
+       signed=st.booleans())
+def test_radix4_digits_recompose(bits, seed, signed):
+    rng = np.random.default_rng(seed)
+    lo, hi = q.qrange(bits) if signed else (0, (1 << bits) - 1)
+    x = rng.integers(lo, hi + 1, size=(64,), dtype=np.int32)
+    d = q.to_radix4_digits(jnp.asarray(x), bits, signed=signed)
+    assert d.shape[0] == q.num_digits(bits)
+    np.testing.assert_array_equal(np.asarray(q.from_radix4_digits(d)), x)
+    dn = np.asarray(d)
+    assert dn[:-1].min() >= 0 and dn[:-1].max() <= 3 if d.shape[0] > 1 else True
+    if signed:
+        assert dn[-1].min() >= -2 and dn[-1].max() <= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(bits=st.sampled_from(BITS), seed=st.integers(0, 2**31 - 1),
+       signed=st.booleans())
+def test_bit_planes_recompose(bits, seed, signed):
+    rng = np.random.default_rng(seed)
+    lo, hi = q.qrange(bits) if signed else (0, (1 << bits) - 1)
+    x = rng.integers(lo, hi + 1, size=(32,), dtype=np.int32)
+    planes = np.asarray(q.to_bits(jnp.asarray(x), bits, signed=signed))
+    recon = sum((1 << i) * planes[i].astype(np.int64) for i in range(bits))
+    np.testing.assert_array_equal(recon, x)
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quantize_dequantize_error_bound(bits):
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, 64)).astype(np.float32)
+    qt = q.quantize(jnp.asarray(x), bits, axis=-1)
+    err = np.abs(np.asarray(qt.dequantize()) - x)
+    # max error <= scale/2 per channel
+    bound = np.asarray(qt.scale) / 2 + 1e-6
+    assert (err <= bound).all()
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_quantize_packed_matches_unpacked(bits):
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(4, 32)).astype(np.float32)
+    a = q.quantize(jnp.asarray(x), bits, pack=False)
+    b = q.quantize(jnp.asarray(x), bits, pack=True)
+    np.testing.assert_array_equal(np.asarray(a.values),
+                                  np.asarray(b.unpacked_values()))

@@ -1,0 +1,78 @@
+"""Serving-time quantized execution: pre-quantized parameter trees flow
+through jit, shard rules, and produce outputs close to fp."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import bramac_linear as bl
+from repro.core.quant import QuantizedTensor
+from repro.models import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+QCFG8 = bl.QuantConfig(enabled=True, bits_w=8, bits_a=8)
+QCFG4 = bl.QuantConfig(enabled=True, bits_w=4, bits_a=4)
+
+
+def test_tree_prepare_serving_selects_right_leaves():
+    cfg = get_config("dbrx-132b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = bl.tree_prepare_serving(params, QCFG8)
+    # embedding/router stay float, projections + experts become QT
+    assert not isinstance(qparams["embed"]["embedding"], QuantizedTensor)
+    assert isinstance(qparams["embed"]["unembed"], QuantizedTensor)
+    layer = qparams["layers"]["pos0"]
+    assert isinstance(layer["mixer"]["wq"], QuantizedTensor)
+    assert not isinstance(layer["moe"]["router"], QuantizedTensor)
+    assert isinstance(layer["moe"]["w_gate"], QuantizedTensor)
+    assert layer["moe"]["w_gate"].values.ndim == 4   # (periods, E, d, f)
+
+
+def test_int4_weights_are_packed():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 16))
+    qt = bl.prepare_serving(w, QCFG4)
+    # packed along the contraction axis (-2): half the bytes
+    assert qt.packed and qt.values.shape == (16, 16)
+    deq = qt.dequantize()
+    assert float(jnp.max(jnp.abs(deq - w))) < float(jnp.max(jnp.abs(w)))
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "dbrx-132b", "minicpm3-4b"])
+def test_quantized_forward_close_to_fp(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    fp, _, _ = M.forward(params, {"tokens": tokens}, cfg)
+    qparams = bl.tree_prepare_serving(params, QCFG8)
+    q, _, _ = jax.jit(lambda p, b: M.forward(p, b, cfg))(
+        qparams, {"tokens": tokens})
+    cos = float(jnp.sum(fp * q) / (jnp.linalg.norm(fp) * jnp.linalg.norm(q)))
+    assert cos > 0.99, (arch, cos)
+
+
+def test_quantized_decode_roundtrip():
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = bl.tree_prepare_serving(params, QCFG8)
+    caches = M.init_cache(cfg, 2, 16)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    _, caches = M.prefill(qparams, {"tokens": tokens}, cfg, caches)
+    pos = jnp.full((2,), 8, jnp.int32)
+    logits, _ = M.decode_step(qparams, tokens[:, :1], cfg, caches, pos)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+
+def test_serve_einsum_edf_matches_float():
+    rng = np.random.default_rng(0)
+    E, C, d, f = 4, 8, 32, 16
+    x = jnp.asarray(rng.normal(size=(E, C, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(E, d, f)).astype(np.float32))
+    qw = bl.prepare_serving(w, QCFG8)
+    got = bl.serve_einsum_edf(x, qw, transpose_out=False)
+    want = jnp.einsum("ecd,edf->ecf", x, w)
+    rel = float(jnp.linalg.norm(got - want) / jnp.linalg.norm(want))
+    assert rel < 0.02, rel

@@ -1,0 +1,243 @@
+"""Substrate tests: optimizer (+int8 states), checkpoint (+elastic restore),
+data pipeline determinism, fault-tolerant trainer, serving engine."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import model as M
+from repro.optim import adamw
+from repro.runtime.serve import Engine
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# --- optimizer --------------------------------------------------------------
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (64, 32)),
+            "b": {"w": jax.random.normal(k2, (32,)),
+                  "s": jnp.ones((7, 3))}}
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_adamw_descends(quantized):
+    cfg = adamw.AdamWConfig(lr=0.05, weight_decay=0.0,
+                            quantize_state=quantized)
+    params = _toy_params(jax.random.PRNGKey(0))
+    target = _toy_params(jax.random.PRNGKey(1))
+    state = adamw.init(params, cfg)
+
+    def loss(p):
+        return sum(jnp.sum((x - t) ** 2) for x, t in
+                   zip(jax.tree_util.tree_leaves(p),
+                       jax.tree_util.tree_leaves(target)))
+
+    l0 = float(loss(params))
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state, metrics = adamw.apply(params, state, grads, cfg)
+    assert float(loss(params)) < 0.05 * l0
+    assert np.isfinite(metrics["grad_norm"])
+
+
+def test_int8_state_roundtrip_precision():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0
+    q = adamw._q8(x)
+    err = np.abs(np.asarray(adamw._dq8(q) - x))
+    blockmax = np.abs(np.asarray(x)).max()
+    assert err.max() <= blockmax / 127 + 1e-6
+
+
+def test_quantized_state_memory_is_smaller():
+    params = {"w": jnp.zeros((1024, 1024), jnp.float32)}
+    sq = adamw.init(params, adamw.AdamWConfig(quantize_state=True))
+    sf = adamw.init(params, adamw.AdamWConfig(quantize_state=False))
+    bytes_q = sum(l.nbytes for l in jax.tree_util.tree_leaves(sq))
+    bytes_f = sum(l.nbytes for l in jax.tree_util.tree_leaves(sf))
+    assert bytes_q < 0.4 * bytes_f
+
+
+# --- checkpoint -------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"params": _toy_params(jax.random.PRNGKey(2)),
+            "step": jnp.int32(7)}
+    ckpt.save(str(tmp_path), 7, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    back = ckpt.restore(str(tmp_path), 7, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_prune(tmp_path):
+    tree = {"x": jnp.arange(10)}
+    for s in (1, 2, 3, 4):
+        t = ckpt.save(str(tmp_path), s, tree, blocking=False)
+        t.join()
+    ckpt.prune(str(tmp_path), keep=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_elastic_reshard(tmp_path):
+    """Restore onto a different mesh topology (8 → 4 virtual devices).
+
+    Runs in a subprocess so the 8-device XLA flag doesn't leak."""
+    import subprocess
+    import sys
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+import sys
+sys.path.insert(0, "src")
+from repro.checkpoint import ckpt
+
+tree = {{"w": jnp.arange(64.).reshape(8, 8)}}
+mesh8 = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+sh8 = {{"w": NamedSharding(mesh8, P("data"))}}
+tree = jax.tree_util.tree_map(jax.device_put, tree, sh8)
+ckpt.save({str(tmp_path)!r}, 1, tree)
+
+mesh4 = Mesh(np.array(jax.devices()[:4]).reshape(4), ("data",))
+sh4 = {{"w": NamedSharding(mesh4, P("data"))}}
+back = ckpt.restore({str(tmp_path)!r}, 1, tree, shardings=sh4)
+assert back["w"].sharding.mesh.shape["data"] == 4
+np.testing.assert_array_equal(np.asarray(back["w"]),
+                              np.arange(64.).reshape(8, 8))
+print("ELASTIC_OK")
+"""
+    out = subprocess.run([sys.executable, "-c", code], cwd="/root/repo",
+                         capture_output=True, text=True)
+    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+
+
+# --- data pipeline ----------------------------------------------------------
+
+def test_pipeline_deterministic_and_learnable():
+    cfg = DataConfig(vocab_size=256, seq_len=32, global_batch=4, seed=3)
+    pipe = SyntheticLM(cfg)
+    a = pipe.batch_np(10)
+    b = pipe.batch_np(10)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = pipe.batch_np(11)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+    # labels are next-token targets
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+# --- fault-tolerant trainer -------------------------------------------------
+
+def test_trainer_failure_recovery(tmp_path):
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                         async_ckpt=False,
+                         opt=adamw.AdamWConfig(lr=1e-3))
+    pipe = SyntheticLM(DataConfig(cfg.vocab_size, seq_len=16, global_batch=2))
+
+    crashed = {"done": False}
+
+    def failure_hook(step):
+        if step == 5 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected node failure")
+
+    trainer = Trainer(cfg, tcfg, params)
+    history = trainer.train(pipe, num_steps=8, failure_hook=failure_hook)
+    assert trainer.step == 8
+    assert crashed["done"]
+    # steps 4..5 replayed after rollback to checkpoint at 4
+    assert len(history) >= 8
+    assert all(np.isfinite(h["loss"]) for h in history)
+    assert ckpt.latest_step(str(tmp_path)) == 8
+
+
+def test_trainer_straggler_watchdog(tmp_path):
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    tcfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                         straggler_factor=2.0, async_ckpt=False)
+    trainer = Trainer(cfg, tcfg, params)
+    pipe = SyntheticLM(DataConfig(cfg.vocab_size, seq_len=16, global_batch=2))
+    import time as _t
+    for step in range(6):
+        batch = pipe.batch(step)
+        if step == 5:
+            _t.sleep(1.0)          # simulate a slow host before the step
+            t0 = _t.perf_counter()
+            trainer.run_step(batch)
+            continue
+        trainer.run_step(batch)
+    # watchdog itself is exercised via the EWMA bookkeeping
+    assert trainer._ewma is not None
+
+
+# --- serving engine ---------------------------------------------------------
+
+def test_engine_serves_batched_requests():
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, num_slots=2, max_seq=64)
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=n), 5)
+            for n in (7, 12, 9)]
+    eng.run()
+    for r in reqs:
+        assert r.done
+        assert len(r.out_tokens) == 5
+        assert all(0 <= t < cfg.vocab_size for t in r.out_tokens)
+
+
+def test_engine_serves_hybrid_arch():
+    """Continuous batching with mixed recurrent+attention+MoE state (jamba):
+    slot scatter must handle KV caches, mamba (h, conv) and MoE together,
+    and recurrent archs must prefill at exact length (no padding)."""
+    cfg = get_config("jamba-1.5-large-398b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, num_slots=2, max_seq=48)
+    assert eng._bucket_q == 1        # exact-length prefill for SSM archs
+    rng = np.random.default_rng(1)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=n), 3)
+            for n in (5, 9, 6)]
+    eng.run()
+    assert all(r.done and len(r.out_tokens) == 3 for r in reqs)
+
+
+def test_engine_matches_unbatched_decode():
+    """Engine output == straight prefill+decode for a single request."""
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.arange(1, 9, dtype=np.int32)
+
+    eng = Engine(cfg, params, num_slots=2, max_seq=32)
+    r = eng.submit(prompt, 4)
+    eng.run()
+
+    caches = M.init_cache(cfg, 1, 32)
+    _, caches = M.prefill(params, {"tokens": jnp.asarray(prompt)[None]},
+                          cfg, caches)
+    # recompute the first token from the last prompt logits
+    logits, _, caches2 = M.forward(
+        params, {"tokens": jnp.asarray(prompt)[None]}, cfg,
+        caches=M.init_cache(cfg, 1, 32),
+        cache_pos=jnp.zeros((1,), jnp.int32))
+    toks = [int(jnp.argmax(logits[0, -1]))]
+    caches = caches2
+    for i in range(3):
+        pos = jnp.asarray([len(prompt) + i], jnp.int32)
+        lg, caches = M.decode_step(params, jnp.asarray([[toks[-1]]]), cfg,
+                                   caches, pos)
+        toks.append(int(jnp.argmax(lg[0])))
+    assert r.out_tokens == toks
