@@ -146,6 +146,64 @@ def bench_kernels(fast=False):
     _row("kernel_mac2_mvm_alg1_4bit", us, "Algorithm 1 bit-exact MVM")
 
 
+# --- Distributed: replicated vs tensor-parallel quant_matmul -----------------
+
+def bench_tp(fast=False):
+    """Replicated vs TP quant_matmul on 8 virtual host devices (subprocess
+    so the XLA device-count flag doesn't leak into this process's jax)."""
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    dim = 128 if fast else 256
+    code = (
+        'import os\n'
+        'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"\n'
+        'import sys, time\n'
+        f'sys.path.insert(0, {src!r})\n'
+        'import jax, numpy as np, jax.numpy as jnp\n'
+        'from repro.core.quant import qrange\n'
+        'from repro.kernels import ops\n'
+        'from repro.parallel import tp\n'
+        'mesh = jax.make_mesh((8,), ("model",))\n'
+        'rng = np.random.default_rng(0)\n'
+        f'M = K = N = {dim}\n'
+        'lo, hi = qrange(8)\n'
+        'xq = jnp.asarray(rng.integers(lo, hi + 1, (M, K), dtype=np.int8))\n'
+        'wq = jnp.asarray(rng.integers(lo, hi + 1, (K, N), dtype=np.int8))\n'
+        'one = jnp.ones((1, 1), jnp.float32)\n'
+        'def timed(fn):\n'
+        '    fn().block_until_ready()\n'
+        '    t0 = time.perf_counter()\n'
+        '    for _ in range(3):\n'
+        '        fn().block_until_ready()\n'
+        '    return (time.perf_counter() - t0) / 3 * 1e6\n'
+        'rep = timed(lambda: ops.quant_matmul(xq, wq, one, one,\n'
+        '                                     bits_a=8, bits_w=8))\n'
+        'for part in ("k", "n"):\n'
+        '    us = timed(lambda: tp.tp_quant_matmul(\n'
+        '        xq, wq, one, one, mesh=mesh, bits_a=8, bits_w=8,\n'
+        '        partition=part))\n'
+        '    print("TPROW,%s,%.1f,%.1f" % (part, us, rep))\n'
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600)
+    if out.returncode != 0:
+        err = (out.stderr.strip().splitlines() or ["unknown"])[-1]
+        _row("tp_quant_matmul_8way", 0.0, f"subprocess failed: {err[:100]}")
+        return
+    for line in out.stdout.splitlines():
+        if not line.startswith("TPROW,"):
+            continue
+        _, part, us_tp, us_rep = line.split(",")
+        us_tp, us_rep = float(us_tp), float(us_rep)
+        _row(f"tp_quant_matmul_{part}sharded_8way_{dim}cube", us_tp,
+             f"replicated {us_rep:.0f}us vs tp {us_tp:.0f}us "
+             f"({us_rep / us_tp:.2f}x, int8, host-CPU interpret)")
+
+
 # --- Dry-run roofline summary (reads results if present) --------------------
 
 def bench_roofline():
@@ -183,6 +241,7 @@ def main() -> None:
         "fig10": bench_fig10, "fig11": bench_fig11,
         "fig13": lambda: bench_fig13(args.fast),
         "kernels": lambda: bench_kernels(args.fast),
+        "tp": lambda: bench_tp(args.fast),
         "roofline": bench_roofline,
     }
     for name, fn in benches.items():

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry point: full test suite + a fast benchmark smoke.
+#
+#   scripts/ci.sh            # everything
+#   scripts/ci.sh tests/test_kernels.py   # forward extra args to pytest
+#
+# The suite must pass with zero collection errors in the offline container:
+# `hypothesis` is OPTIONAL (tests/_hypothesis_compat.py falls back to
+# deterministic example grids when it is absent).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -q "$@"
+python -m benchmarks.run --fast

@@ -30,6 +30,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quant import num_digits
 
+# renamed TPUCompilerParams → CompilerParams across pallas releases
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 DEFAULT_BLOCK = (128, 128, 128)  # (bm, bk, bn) — MXU-aligned
 
 
@@ -131,7 +135,7 @@ def bramac_matmul(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],      # the dummy array
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x_q, w_q, xs, ws)

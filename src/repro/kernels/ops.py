@@ -15,7 +15,12 @@ from repro.core import quant
 from repro.kernels import ref
 from repro.kernels.bramac_matmul import bramac_matmul
 
-_INTERPRET = jax.default_backend() == "cpu"
+
+def _interpret() -> bool:
+    """Pallas interpret mode for non-TPU backends, resolved per call — not
+    frozen at import, so `jax.config.update("jax_platform_name", ...)` after
+    importing this module still selects the right dispatch."""
+    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x, m, axis, value=0):
@@ -55,18 +60,29 @@ def pick_block(M: int, K: int, N: int) -> tuple[int, int, int]:
     return pick(M), pick(K), pick(N)
 
 
-@functools.partial(jax.jit, static_argnames=("bits_a", "bits_w", "signed",
-                                             "out_dtype", "w_packed",
-                                             "use_kernel"))
 def quant_matmul(x_q, w_q, x_scale, w_scale, *, bits_a: int, bits_w: int,
                  signed: bool = True, out_dtype=jnp.float32,
                  w_packed: bool = False, use_kernel: bool = True):
     """Quantized (M,K)x(K,N) matmul via the BRAMAC Pallas kernel.
 
-    Pads to block multiples, runs the kernel (interpret mode on CPU), and
+    Pads to block multiples, runs the kernel (interpret mode off-TPU), and
     slices back. When use_kernel=False runs the pure-jnp digit reference
     (useful under jit-of-vmap where pallas interpret mode is slow).
     """
+    # interpret is resolved here (call/trace time) and enters the jit cache
+    # as a static arg, so flipping the backend after import retraces.
+    return _quant_matmul(x_q, w_q, x_scale, w_scale, bits_a=bits_a,
+                         bits_w=bits_w, signed=signed, out_dtype=out_dtype,
+                         w_packed=w_packed, use_kernel=use_kernel,
+                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("bits_a", "bits_w", "signed",
+                                             "out_dtype", "w_packed",
+                                             "use_kernel", "interpret"))
+def _quant_matmul(x_q, w_q, x_scale, w_scale, *, bits_a: int, bits_w: int,
+                  signed: bool, out_dtype, w_packed: bool, use_kernel: bool,
+                  interpret: bool):
     M, K = x_q.shape
     N = w_q.shape[-1]
     if not use_kernel:
@@ -88,7 +104,7 @@ def quant_matmul(x_q, w_q, x_scale, w_scale, *, bits_a: int, bits_w: int,
     out = bramac_matmul(xp, wp, xs, ws, bits_a=bits_a, bits_w=bits_w,
                         signed=signed, block=(bm, bk, bn),
                         out_dtype=out_dtype, w_packed=w_packed,
-                        interpret=_INTERPRET)
+                        interpret=interpret)
     return out[:M, :N]
 
 

@@ -13,6 +13,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.bramac_linear import QuantConfig
+from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 from repro.runtime.serve import Engine
 
@@ -26,6 +27,8 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--quant-bits", type=int, default=0, choices=(0, 2, 4, 8))
+    ap.add_argument("--shard", type=int, default=0,
+                    help="model-parallel ways over local devices (0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -34,7 +37,15 @@ def main():
                                             bits_w=args.quant_bits,
                                             bits_a=args.quant_bits))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq)
+    mesh = None
+    if args.shard:
+        n = len(jax.devices())
+        if n % args.shard:
+            raise SystemExit(f"--shard {args.shard} must divide the "
+                             f"{n} local devices")
+        mesh = make_host_mesh(model=args.shard)
+    eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
+                 mesh=mesh)
     rng = np.random.default_rng(0)
     reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
                                     size=int(rng.integers(4, 24))),

@@ -1,0 +1,2 @@
+# Sharded execution: logical-axis rules (sharding), version-portable
+# collectives entry points (compat), tensor-parallel quantized matmul (tp).

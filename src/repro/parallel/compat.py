@@ -1,0 +1,70 @@
+"""Version-portable `shard_map` (JAX 0.4.x → current).
+
+`shard_map` has moved twice across JAX releases:
+
+  * ≤ 0.4.x / 0.5.x: `jax.experimental.shard_map.shard_map(...)` with the
+    replication checker flag spelled `check_rep`;
+  * ≥ 0.6: promoted to `jax.shard_map(...)` with the flag renamed
+    `check_vma` (varying-manual-axes), and the old experimental path
+    deprecated then removed.
+
+Runtime code in this repo must run on whichever JAX the container bakes in
+(currently 0.4.37, which has *neither* `jax.shard_map` nor `check_vma`), so
+every `shard_map` call site goes through this module: it resolves the
+implementation once, accepts both flag spellings, and translates to whatever
+the resolved implementation understands.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable
+
+import jax
+
+_IMPL: Callable[..., Any] | None = None
+_IMPL_PARAMS: frozenset[str] | None = None
+
+
+def _resolve() -> Callable[..., Any]:
+    """Pick the shard_map implementation available on this JAX."""
+    impl = getattr(jax, "shard_map", None)
+    if impl is None:
+        from jax.experimental.shard_map import shard_map as impl
+    return impl
+
+
+def _impl() -> tuple[Callable[..., Any], frozenset[str]]:
+    global _IMPL, _IMPL_PARAMS
+    if _IMPL is None:
+        _IMPL = _resolve()
+        try:
+            _IMPL_PARAMS = frozenset(inspect.signature(_IMPL).parameters)
+        except (TypeError, ValueError):      # C-accelerated / exotic wrapper
+            _IMPL_PARAMS = frozenset()
+    return _IMPL, _IMPL_PARAMS
+
+
+def shard_map(f: Callable[..., Any], /, *, mesh, in_specs, out_specs,
+              check_vma: bool | None = None, check_rep: bool | None = None,
+              **kwargs):
+    """Map `f` over shards of a mesh — portable across JAX versions.
+
+    `check_vma` and `check_rep` are aliases for the same knob (the
+    replication/varying-axes checker); pass either and it is forwarded
+    under the name the installed JAX understands, or dropped if the
+    installed JAX has no such knob.
+    """
+    if check_vma is not None and check_rep is not None and \
+            check_vma != check_rep:
+        raise ValueError("check_vma and check_rep are aliases; "
+                         f"got conflicting values {check_vma} != {check_rep}")
+    impl, params = _impl()
+    check = check_vma if check_vma is not None else check_rep
+    if check is not None:
+        if "check_vma" in params:
+            kwargs["check_vma"] = check
+        elif "check_rep" in params:
+            kwargs["check_rep"] = check
+        # neither spelling exists: the checker is gone on this version; drop
+    return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                **kwargs)

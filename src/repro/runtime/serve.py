@@ -10,6 +10,7 @@ inference pattern of §VI-D: weights stay resident while inputs stream.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Any
 
 import jax
@@ -17,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.parallel import sharding as shd
 
 
 @dataclasses.dataclass
@@ -29,11 +31,26 @@ class Request:
 
 
 class Engine:
+    """`mesh` switches on the sharded decode path: the inference sharding
+    profile (`serve_rules`: weights tensor-parallel over `model`, no FSDP
+    all-gathers) is activated for the engine's lifetime and the parameter
+    tree — float or pre-quantized `QuantizedTensor` leaves alike — is
+    placed onto the mesh, so every jit'd prefill/decode below runs
+    tensor-parallel."""
+
     def __init__(self, cfg, params, num_slots: int, max_seq: int,
-                 eos_id: int | None = None):
+                 eos_id: int | None = None, mesh=None):
+        self.mesh = mesh
+        self._ctx = None
+        if mesh is not None:
+            self._ctx = shd.activate(mesh,
+                                     shd.serve_rules("pod" in mesh.axis_names))
+            params = jax.device_put(params,
+                                    shd.param_shardings(params, self._ctx))
         self.cfg, self.params = cfg, params
         self.num_slots, self.max_seq = num_slots, max_seq
         self.eos_id = eos_id
+        self._next_uid = itertools.count()
         self.caches = M.init_cache(cfg, num_slots, max_seq)
         self.slot_req: list[Request | None] = [None] * num_slots
         self.positions = np.zeros((num_slots,), np.int32)
@@ -52,8 +69,10 @@ class Engine:
 
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int = 16) -> Request:
-        req = Request(uid=len(self._queue), prompt=np.asarray(prompt,
-                                                              np.int32),
+        # uid comes from a monotonic counter: queue length would recycle
+        # ids once requests drain, aliasing two live requests
+        req = Request(uid=next(self._next_uid), prompt=np.asarray(prompt,
+                                                                  np.int32),
                       max_new_tokens=max_new_tokens)
         self._queue.append(req)
         return req
@@ -131,6 +150,14 @@ class Engine:
         for _ in range(max_ticks):
             if not self.step() and not self._queue:
                 break
+
+    def close(self) -> None:
+        """Release the engine's sharding context (the activate() in __init__
+        is process-global; a later meshless Engine or trainer in the same
+        process would otherwise trace against this engine's serve rules)."""
+        if self._ctx is not None and shd.active() is self._ctx:
+            shd.deactivate()
+        self._ctx = None
 
 
 def _bucket(n: int, q: int = 16) -> int:

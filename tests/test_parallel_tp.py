@@ -1,0 +1,160 @@
+"""Tensor-parallel quantized execution on 8 virtual CPU devices (subprocess
+so the XLA device-count flag never leaks into other tests), plus unit tests
+for the version-portable shard_map compat layer."""
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+from repro.parallel import compat
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, timeout=600) -> str:
+    pre = (
+        'import os\n'
+        'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"\n'
+        'import sys\n'
+        'sys.path.insert(0, "src")\n'
+        'import jax, numpy as np\n'
+        'import jax.numpy as jnp\n'
+        'from jax.sharding import Mesh, NamedSharding, PartitionSpec as P\n'
+    )
+    out = subprocess.run([sys.executable, "-c", pre + code], cwd=REPO_ROOT,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_tp_quant_matmul_bit_exact_all_bits():
+    """K-sharded (int32 partial psum) and N-sharded (column-parallel) TP
+    matmul == single-device quant_matmul, bit for bit, for 2/4/8-bit."""
+    out = run_sub("""
+from repro.core.quant import qrange
+from repro.kernels import ops
+from repro.parallel import tp
+
+mesh = jax.make_mesh((8,), ("model",))
+rng = np.random.default_rng(0)
+M, K, N = 16, 64, 24
+for bits_a in (2, 4, 8):
+    for bits_w in (2, 4, 8):
+        la, ha = qrange(bits_a)
+        lw, hw = qrange(bits_w)
+        xq = jnp.asarray(rng.integers(la, ha + 1, (M, K), dtype=np.int8))
+        wq = jnp.asarray(rng.integers(lw, hw + 1, (K, N), dtype=np.int8))
+        xs = jnp.asarray(rng.uniform(0.5, 2.0, (M, 1)).astype(np.float32))
+        ws = jnp.asarray(rng.uniform(0.5, 2.0, (1, N)).astype(np.float32))
+        ref = ops.quant_matmul(xq, wq, xs, ws, bits_a=bits_a, bits_w=bits_w)
+        for part in ("k", "n"):
+            got = tp.tp_quant_matmul(xq, wq, xs, ws, mesh=mesh,
+                                     bits_a=bits_a, bits_w=bits_w,
+                                     partition=part)
+            assert got.dtype == ref.dtype
+            assert bool(jnp.all(got == ref)), (bits_a, bits_w, part)
+print("TP_EXACT_OK")
+""")
+    assert "TP_EXACT_OK" in out
+
+
+def test_tp_quant_matmul_respects_active_tp_rule():
+    """With a sharding ctx active, tp resolves the physical axis from the
+    logical `tp` rule instead of assuming an axis name."""
+    out = run_sub("""
+from repro.core.quant import qrange
+from repro.kernels import ops
+from repro.parallel import sharding as shd, tp
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+shd.activate(mesh)                       # rules: tp -> "model"
+rng = np.random.default_rng(1)
+lo, hi = qrange(8)
+xq = jnp.asarray(rng.integers(lo, hi + 1, (8, 32), dtype=np.int8))
+wq = jnp.asarray(rng.integers(lo, hi + 1, (32, 16), dtype=np.int8))
+one = jnp.ones((1, 1), jnp.float32)
+ref = ops.quant_matmul(xq, wq, one, one, bits_a=8, bits_w=8)
+got = tp.tp_quant_matmul(xq, wq, one, one, mesh=mesh, bits_a=8, bits_w=8)
+assert bool(jnp.all(got == ref))
+print("TP_RULE_OK")
+""")
+    assert "TP_RULE_OK" in out
+
+
+def test_tp_quant_matmul_divisibility_error():
+    out = run_sub("""
+from repro.parallel import tp
+
+mesh = jax.make_mesh((8,), ("model",))
+x = jnp.zeros((4, 12), jnp.int8)         # K=12 not divisible by 8
+w = jnp.zeros((12, 8), jnp.int8)
+one = jnp.ones((1, 1), jnp.float32)
+try:
+    tp.tp_quant_matmul(x, w, one, one, mesh=mesh, bits_a=8, bits_w=8)
+except ValueError as e:
+    assert "not divisible" in str(e)
+    print("TP_DIV_OK")
+""")
+    assert "TP_DIV_OK" in out
+
+
+def test_sharded_quantized_engine_decode():
+    """Engine(mesh=...) with a pre-quantized parameter tree: the full
+    continuous-batching loop (prefill + decode) completes tensor-parallel."""
+    out = run_sub("""
+from repro.configs import get_config
+from repro.core import bramac_linear as bl
+from repro.models import model as M
+from repro.runtime.serve import Engine
+
+cfg = get_config("granite-8b", smoke=True)
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+qparams = bl.tree_prepare_serving(
+    params, bl.QuantConfig(enabled=True, bits_w=8, bits_a=8))
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+eng = Engine(cfg, qparams, num_slots=2, max_seq=32, mesh=mesh)
+reqs = [eng.submit([1, 2, 3], max_new_tokens=3),
+        eng.submit([4, 5], max_new_tokens=3)]
+eng.run()
+assert all(r.done for r in reqs)
+assert all(len(r.out_tokens) == 3 for r in reqs)
+assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out_tokens)
+print("ENGINE_TP_OK")
+""")
+    assert "ENGINE_TP_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# compat shim units (in-process: a 1-device mesh needs no XLA flag)
+# ---------------------------------------------------------------------------
+
+def test_compat_shard_map_runs_with_either_flag_spelling():
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("d",))
+    x = jnp.arange(4.0)
+    for kw in ({"check_vma": False}, {"check_rep": False}, {}):
+        f = compat.shard_map(lambda a: a * 2, mesh=mesh, in_specs=P("d"),
+                             out_specs=P("d"), **kw)
+        assert jnp.all(f(x) == x * 2)
+
+
+def test_compat_shard_map_conflicting_flags_raise():
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("d",))
+    with pytest.raises(ValueError, match="aliases"):
+        compat.shard_map(lambda a: a, mesh=mesh, in_specs=P("d"),
+                         out_specs=P("d"), check_vma=True, check_rep=False)
+
+
+def test_compat_translates_to_installed_spelling():
+    """The kwarg actually forwarded must be one the installed JAX accepts."""
+    impl, params = compat._impl()
+    has_new = "check_vma" in params
+    has_old = "check_rep" in params
+    assert has_new or has_old or params == frozenset()
+    # and the public entry accepted *both* spellings above regardless

@@ -66,6 +66,23 @@ def test_quantized_decode_roundtrip():
     assert np.isfinite(np.asarray(logits, np.float32)).all()
 
 
+def test_engine_uids_unique_after_queue_drain():
+    """Regression: uid was `len(queue)`, so ids recycled once the queue
+    drained and two live requests could alias.  Now a monotonic counter."""
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    from repro.runtime.serve import Engine
+    eng = Engine(cfg, params, num_slots=2, max_seq=32)
+    r1 = eng.submit([1, 2, 3], max_new_tokens=2)
+    r2 = eng.submit([4, 5], max_new_tokens=2)
+    eng.run()
+    assert r1.done and r2.done
+    r3 = eng.submit([6, 7], max_new_tokens=2)   # queue drained before this
+    assert len({r1.uid, r2.uid, r3.uid}) == 3
+    eng.run()
+    assert r3.done
+
+
 def test_serve_einsum_edf_matches_float():
     rng = np.random.default_rng(0)
     E, C, d, f = 4, 8, 32, 16
