@@ -4,12 +4,21 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * us_per_call — wall time of evaluating our model/kernel for that entry,
   * derived     — the reproduced quantity compared against the paper.
 
-Run:  PYTHONPATH=src python -m benchmarks.run [--fast]
+Run:  PYTHONPATH=src python -m benchmarks.run [--fast] [--json PATH]
+
+--json additionally writes the rows as machine-readable records
+({name, us_per_call, derived, deterministic}) for scripts/check_bench.py's
+regression gate: `deterministic` rows reproduce paper quantities that must
+match the checked-in benchmarks/baseline.json exactly; the rest are wall-
+time measurements gated only by a generous tolerance.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
+
+RECORDS: list[dict] = []
 
 
 def _timed(fn, *args, repeat=3, **kw):
@@ -20,8 +29,14 @@ def _timed(fn, *args, repeat=3, **kw):
     return (time.perf_counter() - t0) / repeat * 1e6, out
 
 
-def _row(name, us, derived):
+def _row(name, us, derived, deterministic=False, record=True):
+    """record=False keeps a row out of the --json gate set — for rows whose
+    name/content depends on gitignored local state (results/)."""
     print(f"{name},{us:.1f},{derived}")
+    if record:
+        RECORDS.append({"name": name, "us_per_call": round(us, 1),
+                        "derived": str(derived),
+                        "deterministic": deterministic})
 
 
 # --- Table II: eFSM latencies & parallelism --------------------------------
@@ -36,11 +51,11 @@ def bench_table2():
 
     us, t = _timed(table)
     _row("table2_latency_2sa", us, "/".join(map(str, t["BRAMAC-2SA"][0]))
-         + " (paper 5/7/11)")
+         + " (paper 5/7/11)", deterministic=True)
     _row("table2_latency_1da", us, "/".join(map(str, t["BRAMAC-1DA"][0]))
-         + " (paper 3/4/6)")
+         + " (paper 3/4/6)", deterministic=True)
     _row("table2_parallel_2sa", us, "/".join(map(str, t["BRAMAC-2SA"][1]))
-         + " (paper 80/40/20)")
+         + " (paper 80/40/20)", deterministic=True)
 
 
 # --- Fig 7: adder study -----------------------------------------------------
@@ -51,9 +66,9 @@ def bench_fig7():
     us, d = _timed(lambda: {k: adder_delay_ps(k, 32)
                             for k in ("RCA", "CBA", "CLA")})
     _row("fig7_rca_over_cba", us,
-         f"{d['RCA'] / d['CBA']:.2f}x (paper 2.8x)")
+         f"{d['RCA'] / d['CBA']:.2f}x (paper 2.8x)", deterministic=True)
     _row("fig7_rca_over_cla", us,
-         f"{d['RCA'] / d['CLA']:.2f}x (paper 2.5x)")
+         f"{d['RCA'] / d['CLA']:.2f}x (paper 2.5x)", deterministic=True)
 
 
 # --- Fig 9: peak MAC throughput --------------------------------------------
@@ -68,7 +83,8 @@ def bench_fig9():
         for bits in (2, 4, 8):
             us, boost = _timed(throughput_boost, bits, variant)
             _row(f"fig9_boost_{tag}_{bits}bit", us,
-                 f"{boost:.2f}x (paper {paper[(tag, bits)]}x)")
+                 f"{boost:.2f}x (paper {paper[(tag, bits)]}x)",
+                 deterministic=True)
 
 
 # --- Fig 10: utilization efficiency -----------------------------------------
@@ -77,8 +93,10 @@ def bench_fig10():
     from repro.core.arch_models import utilization_advantage
 
     us, adv = _timed(utilization_advantage)
-    _row("fig10_vs_ccb", us, f"{adv['vs_ccb']:.2f}x (paper 1.3x)")
-    _row("fig10_vs_comefa", us, f"{adv['vs_comefa']:.2f}x (paper 1.1x)")
+    _row("fig10_vs_ccb", us, f"{adv['vs_ccb']:.2f}x (paper 1.3x)",
+         deterministic=True)
+    _row("fig10_vs_comefa", us, f"{adv['vs_comefa']:.2f}x (paper 1.1x)",
+         deterministic=True)
 
 
 # --- Fig 11: GEMV speedups ---------------------------------------------------
@@ -92,7 +110,7 @@ def bench_fig11():
     us, ms = _timed(max_speedups)
     for key, val in ms.items():
         _row(f"fig11_{key[0]}_{key[1]}bit", us / len(ms),
-             f"{val:.2f}x (paper {paper[key]}x)")
+             f"{val:.2f}x (paper {paper[key]}x)", deterministic=True)
 
 
 # --- Fig 13 / Table III: DLA case study --------------------------------------
@@ -109,7 +127,7 @@ def bench_fig13(fast=False):
     for (model, vname), row in avg.items():
         _row(f"fig13_{model}_{vname}", us / len(avg),
              f"{row['speedup']:.2f}x speedup / {row['rel_area']:.2f}x area "
-             f"(paper {paper[(model, vname)]}x)")
+             f"(paper {paper[(model, vname)]}x)", deterministic=True)
 
 
 # --- Kernels: BRAMAC matmul & MAC2 (interpret mode on CPU) -------------------
@@ -146,24 +164,59 @@ def bench_kernels(fast=False):
     _row("kernel_mac2_mvm_alg1_4bit", us, "Algorithm 1 bit-exact MVM")
 
 
-# --- Distributed: replicated vs tensor-parallel quant_matmul -----------------
+# --- Distributed: replicated vs sharded (8 virtual host devices) ------------
 
-def bench_tp(fast=False):
-    """Replicated vs TP quant_matmul on 8 virtual host devices (subprocess
-    so the XLA device-count flag doesn't leak into this process's jax)."""
+def _subprocess_bench(payload: str, prefix: str, fail_name: str):
+    """Run a distributed bench payload in an 8-virtual-device subprocess
+    (the XLA device-count flag must be set before jax import and must not
+    leak into this process).  The payload sees jax/np/jnp and a
+    `timed(fn) -> us` helper, and prints `<prefix>,<tag>,<us>,<us_rep>`
+    rows; returns them as (tag, us, us_rep) tuples.  On a nonzero exit a
+    `fail_name` failure row is emitted instead (the gate then reports the
+    success rows as MISSING — a broken distributed path fails CI)."""
     import os
     import subprocess
     import sys
 
     src = os.path.join(os.path.dirname(os.path.dirname(
         os.path.abspath(__file__))), "src")
-    dim = 128 if fast else 256
-    code = (
+    pre = (
         'import os\n'
         'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"\n'
         'import sys, time\n'
         f'sys.path.insert(0, {src!r})\n'
         'import jax, numpy as np, jax.numpy as jnp\n'
+        'def timed(fn):\n'
+        '    fn().block_until_ready()\n'
+        '    t0 = time.perf_counter()\n'
+        '    for _ in range(3):\n'
+        '        fn().block_until_ready()\n'
+        '    return (time.perf_counter() - t0) / 3 * 1e6\n'
+    )
+    try:
+        out = subprocess.run([sys.executable, "-c", pre + payload],
+                             capture_output=True, text=True, timeout=600)
+    except subprocess.TimeoutExpired:
+        # a hung collective must degrade to a failure row (the gate then
+        # reports the success rows MISSING), not crash the whole sweep
+        _row(fail_name, 0.0, "subprocess timed out after 600s")
+        return []
+    if out.returncode != 0:
+        err = (out.stderr.strip().splitlines() or ["unknown"])[-1]
+        _row(fail_name, 0.0, f"subprocess failed: {err[:100]}")
+        return []
+    rows = []
+    for line in out.stdout.splitlines():
+        if line.startswith(prefix + ","):
+            _, tag, us, us_rep = line.split(",")
+            rows.append((tag, float(us), float(us_rep)))
+    return rows
+
+
+def bench_tp(fast=False):
+    """Replicated vs TP quant_matmul."""
+    dim = 128 if fast else 256
+    payload = (
         'from repro.core.quant import qrange\n'
         'from repro.kernels import ops\n'
         'from repro.parallel import tp\n'
@@ -174,12 +227,6 @@ def bench_tp(fast=False):
         'xq = jnp.asarray(rng.integers(lo, hi + 1, (M, K), dtype=np.int8))\n'
         'wq = jnp.asarray(rng.integers(lo, hi + 1, (K, N), dtype=np.int8))\n'
         'one = jnp.ones((1, 1), jnp.float32)\n'
-        'def timed(fn):\n'
-        '    fn().block_until_ready()\n'
-        '    t0 = time.perf_counter()\n'
-        '    for _ in range(3):\n'
-        '        fn().block_until_ready()\n'
-        '    return (time.perf_counter() - t0) / 3 * 1e6\n'
         'rep = timed(lambda: ops.quant_matmul(xq, wq, one, one,\n'
         '                                     bits_a=8, bits_w=8))\n'
         'for part in ("k", "n"):\n'
@@ -188,20 +235,38 @@ def bench_tp(fast=False):
         '        partition=part))\n'
         '    print("TPROW,%s,%.1f,%.1f" % (part, us, rep))\n'
     )
-    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=600)
-    if out.returncode != 0:
-        err = (out.stderr.strip().splitlines() or ["unknown"])[-1]
-        _row("tp_quant_matmul_8way", 0.0, f"subprocess failed: {err[:100]}")
-        return
-    for line in out.stdout.splitlines():
-        if not line.startswith("TPROW,"):
-            continue
-        _, part, us_tp, us_rep = line.split(",")
-        us_tp, us_rep = float(us_tp), float(us_rep)
+    for part, us_tp, us_rep in _subprocess_bench(payload, "TPROW",
+                                                 "tp_quant_matmul_8way"):
         _row(f"tp_quant_matmul_{part}sharded_8way_{dim}cube", us_tp,
              f"replicated {us_rep:.0f}us vs tp {us_tp:.0f}us "
              f"({us_rep / us_tp:.2f}x, int8, host-CPU interpret)")
+
+
+def bench_ep(fast=False):
+    """Replicated vs expert-parallel vs DP×TP `ep_quant_einsum_edf`."""
+    C, d = (64, 128) if fast else (128, 256)
+    payload = (
+        'from repro.core import bramac_linear as bl\n'
+        'from repro.parallel import ep, sharding as shd\n'
+        'rng = np.random.default_rng(0)\n'
+        f'E, C, d, f = 8, {C}, {d}, {d}\n'
+        'x = jnp.asarray(rng.normal(size=(E, C, d)).astype(np.float32))\n'
+        'w = jnp.asarray(rng.normal(size=(E, d, f)).astype(np.float32))\n'
+        'qw = bl.prepare_serving(w, bl.QuantConfig(enabled=True, bits_w=8))\n'
+        'rep = timed(lambda: bl.serve_einsum_edf(x, qw, False))\n'
+        'cases = (("ep8", shd.build_mesh("model=8"), "e", None),\n'
+        '         ("dp2xtp4", shd.build_mesh("data=2,model=4"), "d",\n'
+        '          "data"))\n'
+        'for tag, mesh, part, dp in cases:\n'
+        '    us = timed(lambda: ep.ep_quant_einsum_edf(\n'
+        '        x, qw, mesh=mesh, partition=part, dp_axis=dp))\n'
+        '    print("EPROW,%s,%.1f,%.1f" % (tag, us, rep))\n'
+    )
+    for tag, us_ep, us_rep in _subprocess_bench(payload, "EPROW",
+                                                "ep_quant_einsum_8way"):
+        _row(f"ep_quant_einsum_{tag}_E8x{C}x{d}", us_ep,
+             f"replicated {us_rep:.0f}us vs sharded {us_ep:.0f}us "
+             f"({us_rep / us_ep:.2f}x, int8, host-CPU interpret)")
 
 
 # --- Dry-run roofline summary (reads results if present) --------------------
@@ -214,18 +279,19 @@ def bench_roofline():
     files = sorted(glob.glob("results/dryrun/*__pod.json"))
     if not files:
         _row("roofline_table", 0.0, "no dry-run results yet "
-             "(run python -m repro.launch.dryrun)")
+             "(run python -m repro.launch.dryrun)", record=False)
         return
     for f in files:
         rec = json.load(open(f))
         tag = os.path.basename(f).replace("__pod.json", "")
         if rec.get("status") != "ok":
-            _row(f"roofline_{tag}", 0.0, rec.get("status"))
+            _row(f"roofline_{tag}", 0.0, rec.get("status"),
+                 record=False)
             continue
         r = rec["roofline"]
         _row(f"roofline_{tag}", rec.get("compile_s", 0) * 1e6,
              f"dominant={r['dominant']} frac={r['roofline_fraction']:.2f} "
-             f"useful={r['useful_ratio']:.2f}")
+             f"useful={r['useful_ratio']:.2f}", record=False)
 
 
 def main() -> None:
@@ -233,6 +299,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="smaller kernel shapes")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write machine-readable records to PATH")
     args, _ = ap.parse_known_args()
 
     print("name,us_per_call,derived")
@@ -242,12 +310,18 @@ def main() -> None:
         "fig13": lambda: bench_fig13(args.fast),
         "kernels": lambda: bench_kernels(args.fast),
         "tp": lambda: bench_tp(args.fast),
+        "ep": lambda: bench_ep(args.fast),
         "roofline": bench_roofline,
     }
     for name, fn in benches.items():
         if args.only and name != args.only:
             continue
         fn()
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"fast": args.fast, "only": args.only,
+                       "records": RECORDS}, fh, indent=1)
+            fh.write("\n")
 
 
 if __name__ == "__main__":

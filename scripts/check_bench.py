@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: compare a fresh `benchmarks/run.py --fast
+--json` run against the checked-in benchmarks/baseline.json.
+
+Policy (documented in ROADMAP.md §CI):
+  * `deterministic` records reproduce paper quantities (Table II, Figs
+    7/9/10/11/13) — their `derived` strings must match the baseline
+    EXACTLY; any drift is a correctness regression, not noise.
+  * every baseline record must still be produced (a missing row means a
+    bench crashed or a distributed subprocess failed);
+  * wall times are gated with a deliberately generous tolerance
+    (default 20x, with a 200us floor) — CI containers are noisy, so only
+    order-of-magnitude blowups fail.
+
+Usage:
+    python scripts/check_bench.py                 # runs --fast itself
+    python scripts/check_bench.py --fresh out.json   # reuse a prior run
+    python scripts/check_bench.py --update        # rewrite the baseline
+
+Exit status 0 = gate passed, 1 = regression, 2 = couldn't run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO_ROOT, "benchmarks", "baseline.json")
+
+US_FLOOR = 200.0          # timings under this are jitter, never gated
+
+
+def run_fast_bench(json_path: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--fast", "--json",
+         json_path], cwd=REPO_ROOT, env=env)
+    if proc.returncode != 0:
+        print(f"check_bench: benchmark run failed (rc={proc.returncode})")
+        raise SystemExit(2)
+
+
+def load_run(path: str) -> tuple[dict, dict[str, dict]]:
+    with open(path) as fh:
+        data = json.load(fh)
+    return data, {r["name"]: r for r in data["records"]}
+
+
+def compare(base: dict[str, dict], fresh: dict[str, dict],
+            tolerance: float) -> list[str]:
+    failures = []
+    for name, b in base.items():
+        f = fresh.get(name)
+        if f is None:
+            failures.append(f"MISSING   {name}: present in baseline, "
+                            f"absent from fresh run")
+            continue
+        if b.get("deterministic"):
+            if f["derived"] != b["derived"]:
+                failures.append(f"DERIVED   {name}: {f['derived']!r} != "
+                                f"baseline {b['derived']!r}")
+            continue
+        allowed = tolerance * max(float(b["us_per_call"]), US_FLOOR)
+        if float(f["us_per_call"]) > allowed:
+            failures.append(
+                f"WALLTIME  {name}: {f['us_per_call']:.1f}us > "
+                f"{allowed:.0f}us ({tolerance:g}x baseline "
+                f"{b['us_per_call']:.1f}us)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--fresh", default=None, metavar="PATH",
+                    help="reuse an existing --json output instead of "
+                         "running the --fast bench")
+    ap.add_argument("--tolerance", type=float, default=20.0,
+                    help="wall-time blowup factor that fails the gate")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh run")
+    args = ap.parse_args()
+
+    tmpdir = None
+    fresh_path = args.fresh
+    if fresh_path is None:
+        tmpdir = tempfile.mkdtemp(prefix="check_bench_")
+        fresh_path = os.path.join(tmpdir, "bench.json")
+        run_fast_bench(fresh_path)
+    try:
+        meta, fresh = load_run(fresh_path)
+        if args.update:
+            # a partial run must never gut the gate: the baseline has to
+            # come from a full `--fast` sweep covering every prior record
+            if meta.get("only") or not meta.get("fast"):
+                print("check_bench: refusing --update from a partial run "
+                      f"(fast={meta.get('fast')}, only={meta.get('only')}) "
+                      "— regenerate with `benchmarks/run.py --fast --json`")
+                return 2
+            if os.path.exists(args.baseline):
+                _, base = load_run(args.baseline)
+                missing = sorted(set(base) - set(fresh))
+                if missing:
+                    print(f"check_bench: refusing --update — fresh run "
+                          f"lost {len(missing)} baseline record(s): "
+                          f"{', '.join(missing[:5])}")
+                    return 2
+            shutil.copyfile(fresh_path, args.baseline)
+            print(f"check_bench: baseline updated "
+                  f"({len(fresh)} records -> {args.baseline})")
+            return 0
+        if not os.path.exists(args.baseline):
+            print(f"check_bench: no baseline at {args.baseline} — run with "
+                  f"--update to create one")
+            return 2
+        base_meta, base = load_run(args.baseline)
+        if (bool(meta.get("fast")) != bool(base_meta.get("fast"))
+                or (meta.get("only") or None)
+                != (base_meta.get("only") or None)):
+            # shape-suffixed row names differ between configs — diagnose
+            # the mismatch instead of reporting phantom MISSING rows
+            print(f"check_bench: fresh run config "
+                  f"(fast={meta.get('fast')}, only={meta.get('only')}) "
+                  f"does not match baseline "
+                  f"(fast={base_meta.get('fast')}, "
+                  f"only={base_meta.get('only')}) — rerun with matching "
+                  f"flags")
+            return 2
+    finally:
+        if tmpdir is not None:
+            shutil.rmtree(tmpdir, ignore_errors=True)
+
+    failures = compare(base, fresh, args.tolerance)
+    n_det = sum(1 for r in base.values() if r.get("deterministic"))
+    print(f"check_bench: {len(base)} baseline records "
+          f"({n_det} deterministic), {len(fresh)} fresh")
+    for extra in sorted(set(fresh) - set(base)):
+        print(f"  new (ungated): {extra}")
+    if failures:
+        print(f"check_bench: FAIL — {len(failures)} regression(s):")
+        for f in failures:
+            print(f"  {f}")
+        return 1
+    print("check_bench: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -93,16 +93,27 @@ def serve_dense(x: jax.Array, qw: quant.QuantizedTensor,
     return y.reshape(*x.shape[:-1], y.shape[-1])
 
 
+def edf_accumulate(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """Unit-scale int32 mode of the expert einsum "ecd,edf->ecf": batched
+    int8 dot_general with an int32 accumulator and NO dequant — the
+    per-tile accumulator of BRAMAC §VI many-tile scale-out, and the
+    expert-einsum analogue of `ops.quant_matmul(..., out_dtype=jnp.int32)`
+    with unit scales.  `parallel/ep.py` runs this per shard so partials
+    meet in an integer `psum` before the one dequant epilogue —
+    blocking/sharding cannot perturb the result."""
+    return jax.lax.dot_general(
+        x_q, w_q,
+        (((2,), (1,)), ((0,), (0,))),                       # batch E
+        preferred_element_type=jnp.int32)                   # (E, C, f)
+
+
 def serve_einsum_edf(x: jax.Array, qw: quant.QuantizedTensor,
                      transpose_out: bool, bits_a: int = 8) -> jax.Array:
     """Quantized expert einsum: "ecd,edf->ecf" (transpose_out=False) or
-    "ecf,efd->ecd" (True, same contraction layout).  Batched int8
-    dot_general with a dequant epilogue — expert parallelism preserved."""
+    "ecf,efd->ecd" (True, same contraction layout).  Quantize-activations +
+    `edf_accumulate` + dequant epilogue — expert parallelism preserved."""
     qx = quant.quantize(x, bits_a, axis=-1)                 # per (e,c) row
-    acc = jax.lax.dot_general(
-        qx.values, qw.unpacked_values(),
-        (((2,), (1,)), ((0,), (0,))),                       # batch E
-        preferred_element_type=jnp.int32)                   # (E, C, f)
+    acc = edf_accumulate(qx.values, qw.unpacked_values())
     return (acc.astype(jnp.float32) * qx.scale * qw.scale   # (E,1,f) bcast
             ).astype(x.dtype)
 

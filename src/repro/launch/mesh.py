@@ -16,10 +16,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int | None = None, model: int = 1):
-    """Small mesh over whatever local devices exist (tests/examples)."""
-    n = len(jax.devices())
-    data = data or (n // model)
-    return jax.make_mesh((data, model), ("data", "model"))
+    """Small mesh over whatever local devices exist (tests/examples).
+
+    Thin wrapper over `parallel.sharding.build_mesh` (the one mesh
+    builder, shared with the serve launcher's --shard specs)."""
+    from repro.parallel.sharding import build_mesh
+    return build_mesh(data=data, model=model)
 
 
 # TPU v5e hardware constants (per chip) — roofline denominators.

@@ -1,7 +1,8 @@
 """Serving launcher: batched requests through the engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
-        --requests 8 --new-tokens 12 [--quant-bits 4]
+        --requests 8 --new-tokens 12 [--quant-bits 4] \
+        [--shard 4 | --shard data=2,model=4]
 """
 from __future__ import annotations
 
@@ -13,8 +14,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.bramac_linear import QuantConfig
-from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
+from repro.parallel import sharding as shd
 from repro.runtime.serve import Engine
 
 
@@ -27,8 +28,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--quant-bits", type=int, default=0, choices=(0, 2, 4, 8))
-    ap.add_argument("--shard", type=int, default=0,
-                    help="model-parallel ways over local devices (0 = off)")
+    ap.add_argument("--shard", default="",
+                    help="mesh over local devices: an int for model-parallel"
+                         " ways, or a composed spec like 'data=2,model=4' /"
+                         " '2x4' (empty or 0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -38,12 +41,11 @@ def main():
                                             bits_a=args.quant_bits))
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     mesh = None
-    if args.shard:
-        n = len(jax.devices())
-        if n % args.shard:
-            raise SystemExit(f"--shard {args.shard} must divide the "
-                             f"{n} local devices")
-        mesh = make_host_mesh(model=args.shard)
+    if args.shard and args.shard != "0":    # "0" = off (PR 1's contract)
+        try:
+            mesh = shd.build_mesh(args.shard)
+        except ValueError as e:
+            raise SystemExit(f"--shard {args.shard!r}: {e}")
     eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
                  mesh=mesh)
     rng = np.random.default_rng(0)

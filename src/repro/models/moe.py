@@ -19,11 +19,21 @@ import jax.numpy as jnp
 from repro.core import bramac_linear as bl
 from repro.core.quant import QuantizedTensor
 from repro.models.layers import he_init
+from repro.parallel import ep, sharding
 
 
 def _expert_matmul(x, w):
-    """(E,C,a)·(E,a,b)→(E,C,b); takes float or serving-quantized weights."""
+    """(E,C,a)·(E,a,b)→(E,C,b); takes float or serving-quantized weights.
+
+    Quantized weights route through the expert-parallel shard_map einsum
+    whenever a sharding ctx is active and its `expert` axis divides E —
+    bit-exact vs the single-device path, so activation is a pure placement
+    decision.  Float (training) weights keep the plain einsum: pjit +
+    `constrain` already shard it without an explicit collective."""
     if isinstance(w, QuantizedTensor):
+        ctx = sharding.active()
+        if ctx is not None and ep.shardable(x, ctx):
+            return ep.ep_quant_einsum_edf(x, w, mesh=ctx.mesh)
         return bl.serve_einsum_edf(x, w, transpose_out=False)
     return jnp.einsum("ecd,edf->ecf", x, w)
 

@@ -1,2 +1,4 @@
-# Sharded execution: logical-axis rules (sharding), version-portable
-# collectives entry points (compat), tensor-parallel quantized matmul (tp).
+# Sharded execution: logical-axis rules + DP×TP(×EP) mesh builder
+# (sharding), version-portable collectives entry points (compat),
+# tensor-parallel quantized matmul (tp), expert-parallel quantized einsum
+# and MoE layer (ep).

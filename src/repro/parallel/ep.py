@@ -1,0 +1,242 @@
+"""Expert-parallel quantized einsum — §VI many-tile scale-out for MoE.
+
+The MoE expert matmul is a batched (E, C, d)·(E, d, f) einsum.  Two ways to
+cut it across a mesh, both bit-exact against the single-device serving path
+(`bl.serve_einsum_edf`) because every cross-shard reduction happens on the
+int32 accumulator before the one dequant epilogue:
+
+  * **partition="e" (expert-parallel)** — each shard owns E/n experts (the
+    weight slices `param_specs` already places on the `model` axis) and the
+    matching capacity-buffer slices.  Expert compute is embarrassingly
+    parallel: no reduction at all, so exactness is structural.
+  * **partition="d" (contraction-parallel)** — the TP analogue: activations
+    are quantized *globally* (per (e,c) row over the full d), each shard
+    multiplies its d-slice with `bl.edf_accumulate` (unit-scale int32 mode),
+    and an integer `psum` joins the partials — the dummy-array Accumulator
+    row across devices.
+
+Both compose with a `dp_axis` that additionally shards the capacity axis C
+(rows are independent), giving DP×EP / DP×TP meshes.
+
+`ep_moe` is the full expert-parallel MoE layer: tokens sharded over the EP
+axis, routing computed locally, global rank-in-expert recovered with an
+all-gathered count scan, and the dispatch/combine scatter-gather made
+explicit collectives (dispatch: per-destination capacity buffers delivered
+by `all_to_all` and summed at the owner; combine: the dual `all_gather` of
+expert outputs).  Output is bit-exact vs the single-device `moe()` — drops
+included, since dropped tokens contribute exact zeros on both paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import bramac_linear as bl
+from repro.core import quant
+from repro.parallel import sharding
+from repro.parallel.compat import shard_map
+
+
+def _ep_axis(mesh: Mesh, axis: str | None) -> str:
+    """Resolve the physical EP axis: explicit arg > active `expert` rule >
+    "model"."""
+    if axis is not None:
+        return axis
+    ctx = sharding.active()
+    if ctx is not None:
+        phys = ctx.rules.get("expert")
+        if isinstance(phys, str):
+            return phys
+    return "model"
+
+
+def shardable(x: jax.Array, ctx=None) -> bool:
+    """True when the active (or given) sharding ctx can expert-shard an
+    (E, C, d) buffer: a string `expert` rule whose mesh axis divides E."""
+    ctx = ctx or sharding.active()
+    if ctx is None:
+        return False
+    phys = ctx.rules.get("expert")
+    if not isinstance(phys, str) or phys not in ctx.mesh.axis_names:
+        return False
+    return x.shape[0] % ctx.mesh.shape[phys] == 0
+
+
+def _dequant(acc, x_scale, w_scale, dtype):
+    """The single dequant epilogue all partitionings funnel into."""
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(dtype)
+
+
+def ep_quant_einsum_edf(x: jax.Array, qw: quant.QuantizedTensor, *,
+                        mesh: Mesh, axis: str | None = None,
+                        partition: str = "e", bits_a: int = 8,
+                        dp_axis: str | None = None) -> jax.Array:
+    """Sharded quantized expert einsum "ecd,edf->ecf" on `mesh`.
+
+    partition="e": experts sharded (EP), no reduction.
+    partition="d": contraction sharded (TP) with int32 partial-sum psum.
+    dp_axis: optionally also shard the capacity axis C (DP composition).
+    Same logical operands as `bl.serve_einsum_edf`; sharding is applied via
+    shard_map in_specs, so callers pass full (or pre-placed) arrays.
+    """
+    E, C, d = x.shape
+    ax = _ep_axis(mesh, axis)
+    n = mesh.shape[ax]
+    wv = qw.unpacked_values()                               # (E, d|f, f|d)
+    ws = jnp.broadcast_to(qw.scale, (E, 1, wv.shape[-1]))
+    if dp_axis is not None and C % mesh.shape[dp_axis]:
+        raise ValueError(f"C={C} not divisible by {mesh.shape[dp_axis]}-way "
+                         f"'{dp_axis}' axis")
+
+    if partition == "e":
+        if E % n:
+            raise ValueError(f"E={E} not divisible by {n}-way '{ax}' axis")
+
+        def expert_parallel(xb, wvb, wsb):
+            # local experts only: per-row activation quantization and the
+            # int32 accumulator are untouched by the split — structural
+            # bit-exactness.
+            qx = quant.quantize(xb, bits_a, axis=-1)
+            return _dequant(bl.edf_accumulate(qx.values, wvb),
+                            qx.scale, wsb, x.dtype)
+
+        return shard_map(expert_parallel, mesh=mesh,
+                         in_specs=(P(ax, dp_axis, None), P(ax, None, None),
+                                   P(ax, None, None)),
+                         out_specs=P(ax, dp_axis, None),
+                         check_vma=False)(x, wv, ws)
+
+    if partition == "d":
+        if wv.shape[1] % n:
+            raise ValueError(f"d={wv.shape[1]} not divisible by {n}-way "
+                             f"'{ax}' axis")
+        # quantize with full-row scales BEFORE sharding the contraction, so
+        # shard partials are raw int32 (unit-scale mode) and psum is exact.
+        qx = quant.quantize(x, bits_a, axis=-1)
+
+        def contraction_parallel(xv, wvb):
+            return jax.lax.psum(bl.edf_accumulate(xv, wvb), ax)
+
+        acc = shard_map(contraction_parallel, mesh=mesh,
+                        in_specs=(P(None, dp_axis, ax), P(None, ax, None)),
+                        out_specs=P(None, dp_axis, None),
+                        check_vma=False)(qx.values, wv)
+        return _dequant(acc, qx.scale, ws, x.dtype)
+
+    raise ValueError(f"partition must be 'e' or 'd', got {partition!r}")
+
+
+# ---------------------------------------------------------------------------
+# Full expert-parallel MoE layer
+# ---------------------------------------------------------------------------
+
+def ep_moe(p, x, cfg, *, mesh: Mesh, axis: str | None = None,
+           capacity_factor: float = 1.25, bits_a: int = 8):
+    """Expert-parallel `models.moe.moe`: x (B, S, d) → (out, aux_loss).
+
+    Tokens AND experts are sharded over the EP axis.  Each shard routes its
+    local tokens, recovers the *global* rank-in-expert from an all-gathered
+    per-shard count scan (token order is shard-major, so global rank =
+    local rank + earlier shards' counts — identical to the single-device
+    ranks), then builds per-destination capacity buffers that an
+    `all_to_all` delivers to the expert owners; the combine `all_gather`s
+    the expert outputs back (every source token may need any owner's rows
+    at global capacity — a per-source-capacity all_to_all combine is the
+    lossy GShard-style fast path left on the ROADMAP).  Weights may be
+    float or serving-quantized (`QuantizedTensor`) — the quantized path is
+    bit-exact vs single-device `moe()` for 2/4/8-bit.
+    """
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    ax = _ep_axis(mesh, axis)
+    n = mesh.shape[ax]
+    if E % n or T % n:
+        raise ValueError(f"E={E} and T={T} must divide the {n}-way "
+                         f"'{ax}' axis")
+    C = int(max(1, round(T * k / E * capacity_factor)))
+    El = E // n
+    xf = x.reshape(T, d)
+
+    quantized = isinstance(p["w_gate"], quant.QuantizedTensor)
+    if quantized:
+        def unpack(qw):
+            wv = qw.unpacked_values()
+            return wv, jnp.broadcast_to(qw.scale, (E, 1, wv.shape[-1]))
+        weights = [a for name in ("w_gate", "w_up", "w_down")
+                   for a in unpack(p[name])]
+        w_specs = (P(ax, None, None),) * 6
+
+        def mm(xb, wv, ws):
+            qx = quant.quantize(xb, bits_a, axis=-1)
+            return _dequant(bl.edf_accumulate(qx.values, wv),
+                            qx.scale, ws, xb.dtype)
+    else:
+        weights = [p["w_gate"], p["w_up"], p["w_down"]]
+        w_specs = (P(ax, None, None),) * 3
+
+        def mm(xb, wv):
+            return jnp.einsum("ecd,edf->ecf", xb, wv)
+
+    def shard_fn(xl, router, *w):
+        Tl = xl.shape[0]
+        logits = xl.astype(jnp.float32) @ router            # (Tl, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        # ---- global capacity dispatch from local routing ----
+        from repro.models.moe import _rank_in_expert_sort
+        a = top_i.reshape(Tl * k)
+        counts = jnp.bincount(a, length=E)
+        all_counts = jax.lax.all_gather(counts, ax)         # (n, E)
+        me = jax.lax.axis_index(ax)
+        before = jnp.sum(jnp.where(jnp.arange(n)[:, None] < me,
+                                   all_counts, 0), axis=0)  # (E,)
+        pos = _rank_in_expert_sort(a, E) + before[a]        # global rank
+        keep = pos < C
+        pos_c = jnp.where(keep, pos, C - 1)
+
+        xk = jnp.repeat(xl, k, axis=0)                      # (Tl*k, d)
+        buf = jnp.zeros((E, C, d), x.dtype)
+        buf = buf.at[a, pos_c].add(jnp.where(keep[:, None], xk, 0))
+        # dispatch: chunk e' of `buf` is this shard's contribution to the
+        # experts shard e' owns — all_to_all delivers, owner sums sources
+        # (dropped tokens were zeroed above, so the sum is drop-exact).
+        buf = jax.lax.all_to_all(buf.reshape(n, El, C, d), ax,
+                                 split_axis=0, concat_axis=0)
+        buf = jnp.sum(buf, axis=0)                          # (El, C, d)
+
+        # ---- local expert compute ----
+        if quantized:
+            gv, gs, uv, us, dv, ds = w
+            g, u = mm(buf, gv, gs), mm(buf, uv, us)
+            ye = mm(jax.nn.silu(g) * u, dv, ds)
+        else:
+            gv, uv, dv = w
+            g, u = mm(buf, gv), mm(buf, uv)
+            ye = mm(jax.nn.silu(g) * u, dv)                 # (El, C, d)
+
+        # combine: the gather half of the scatter-gather — every source
+        # needs every owner's rows (owner order == axis order, matching
+        # the single-device buffer layout).
+        ye = jax.lax.all_gather(ye, ax, axis=0, tiled=True)  # (E, C, d)
+        yk = ye[a, pos_c]                                   # (Tl*k, d)
+        w_tok = (top_p.reshape(Tl * k).astype(x.dtype)
+                 * keep.astype(x.dtype))[:, None]
+        out = jnp.sum((yk * w_tok).reshape(Tl, k, d), axis=1)
+
+        # ---- Switch load-balance loss (psum'd partial sums) ----
+        frac_tokens = jax.lax.psum(
+            jnp.sum(jax.nn.one_hot(top_i, E, dtype=jnp.float32),
+                    axis=(0, 1)), ax) / (T * k)
+        frac_probs = jax.lax.psum(jnp.sum(probs, axis=0), ax) / T
+        aux = E * jnp.sum(frac_tokens * frac_probs)
+        return out, aux
+
+    out, aux = shard_map(shard_fn, mesh=mesh,
+                         in_specs=(P(ax, None), P(None, None), *w_specs),
+                         out_specs=(P(ax, None), P()),
+                         check_vma=False)(xf, p["router"], *weights)
+    return out.reshape(B, S, d), aux

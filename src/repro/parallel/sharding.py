@@ -22,9 +22,11 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from typing import Any
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -60,6 +62,77 @@ def serve_rules(multi_pod: bool) -> dict:
     r = default_rules(multi_pod)
     r["fsdp"] = None
     return r
+
+
+_AXIS_ORDER = ("pod", "data", "model")
+
+
+def build_mesh(spec: str | int | None = None, *, pod: int | None = None,
+               data: int | None = None, model: int | None = None,
+               devices=None) -> Mesh:
+    """2-D/3-D mesh builder over (pod ×) data × model, rule-driven like the
+    logical-axis rules above: the axis *names* are what `default_rules` /
+    `serve_rules` map onto, so any mesh built here composes with
+    `activate()` (a `pod` axis switches on the multi-pod rule set).
+
+    Accepted specs (string forms are what `--shard` forwards):
+      build_mesh(4)  / build_mesh("4")       → data-filled × 4-way model
+      build_mesh("2x4") / build_mesh("2x2x2")→ (data, model) / (pod, data,
+                                               model) shapes
+      build_mesh("data=2,model=4")           → named axes, any subset
+      build_mesh(model=4)                    → keyword form of the same
+
+    An omitted `data` is filled with the remaining devices; `pod` appears
+    only when requested, keeping 2-D meshes 2-D.
+    """
+    if spec is not None:
+        if pod is not None or data is not None or model is not None:
+            raise ValueError("pass a spec or keyword axes, not both")
+        named = {}
+        s = str(spec).strip()
+        if "=" in s:
+            for part in s.split(","):
+                name, _, val = part.partition("=")
+                if name.strip() not in _AXIS_ORDER:
+                    raise ValueError(f"unknown mesh axis {name.strip()!r} "
+                                     f"(expected {_AXIS_ORDER})")
+                named[name.strip()] = int(val)
+        elif "x" in s:
+            dims = [int(v) for v in s.split("x")]
+            if len(dims) not in (2, 3):
+                raise ValueError(f"mesh spec {s!r} must be 2-D or 3-D")
+            named = dict(zip(_AXIS_ORDER[-len(dims):], dims))
+        else:
+            named = {"model": int(s)}
+        pod, data, model = (named.get(a) for a in _AXIS_ORDER)
+
+    for name, val in zip(_AXIS_ORDER, (pod, data, model)):
+        if val is not None and val < 1:
+            raise ValueError(f"mesh axis {name}={val} must be >= 1 "
+                             f"(omit the axis to disable it)")
+    data_explicit = data is not None
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    model = model or 1
+    fixed = (pod or 1) * model
+    if data is None:
+        if devs.size % fixed:
+            raise ValueError(f"{devs.size} devices not divisible by "
+                             f"pod*model={fixed}")
+        data = devs.size // fixed
+    shape = tuple(v for v in (pod, data, model) if v is not None)
+    axes = tuple(a for a, v in zip(_AXIS_ORDER, (pod, data, model))
+                 if v is not None)
+    need = int(np.prod(shape))
+    if need > devs.size:
+        raise ValueError(f"mesh {dict(zip(axes, shape))} needs {need} "
+                         f"devices, only {devs.size} available")
+    if need < devs.size and data_explicit:
+        # a fully-explicit spec that underfills is usually a typo'd
+        # throughput loss, not intent — flag it (an inferred data axis
+        # always fills, so this only fires on explicit specs)
+        warnings.warn(f"mesh {dict(zip(axes, shape))} uses {need} of "
+                      f"{devs.size} devices", stacklevel=2)
+    return Mesh(devs[:need].reshape(shape), axes)
 
 
 def activate(mesh: Mesh, rules: dict | None = None) -> ShardingCtx:

@@ -40,6 +40,10 @@ class Engine:
 
     def __init__(self, cfg, params, num_slots: int, max_seq: int,
                  eos_id: int | None = None, mesh=None):
+        # mesh may be a jax Mesh or a composed-mesh spec ("model=4",
+        # "data=2,model=4", "2x4", 4, ...) resolved by sharding.build_mesh.
+        if mesh is not None and not isinstance(mesh, jax.sharding.Mesh):
+            mesh = shd.build_mesh(mesh)
         self.mesh = mesh
         self._ctx = None
         if mesh is not None:

@@ -1,0 +1,90 @@
+"""Shared pytest config: the `multidevice` marker + its runner.
+
+Distributed tests need 8 virtual host devices, which XLA only grants via
+`XLA_FLAGS=--xla_force_host_platform_device_count=8` *before* jax import —
+a process-global flag that must not leak into the rest of the suite.  The
+convention (ROADMAP.md §CI):
+
+  * mark the test `@pytest.mark.multidevice` and run its body through
+    `run_multidevice(code)` below;
+  * under plain `pytest` each test spawns one subprocess with the flag set
+    (isolated, but ~2s interpreter+jax startup per test);
+  * `scripts/ci.sh` runs the marked subset in ONE 8-virtual-device pass —
+    it sets XLA_FLAGS for `pytest -m multidevice`, and `run_multidevice`
+    detects the already-virtualized process and executes in-process.
+"""
+from __future__ import annotations
+
+import contextlib
+import io
+import os
+import signal
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEVICE_FLAG = "--xla_force_host_platform_device_count=8"
+
+# Names every multidevice snippet can assume are bound — exec'd by BOTH
+# modes (the subprocess prepends _ENV_PRELUDE; in-process the env/path are
+# already right), so the two can't drift.
+COMMON_IMPORTS = (
+    'import os, sys\n'
+    'import jax, numpy as np\n'
+    'import jax.numpy as jnp\n'
+    'from jax.sharding import Mesh, NamedSharding, PartitionSpec as P\n'
+)
+_ENV_PRELUDE = (
+    'import os\n'
+    f'os.environ["XLA_FLAGS"] = "{DEVICE_FLAG}"\n'
+    'import sys\n'
+    'sys.path.insert(0, "src")\n'
+)
+
+
+# (the `multidevice` marker itself is registered once, in pyproject.toml's
+# [tool.pytest.ini_options] markers list)
+
+
+def _in_process_capable() -> bool:
+    if DEVICE_FLAG not in os.environ.get("XLA_FLAGS", ""):
+        return False
+    import jax
+    return jax.device_count() >= 8
+
+
+def run_multidevice(code: str, timeout: int = 600) -> str:
+    """Run a multidevice test snippet; returns its stdout.
+
+    Subprocess with the XLA flag by default; in-process when this process
+    already has the 8 virtual devices (ci.sh's `-m multidevice` pass)."""
+    if not _in_process_capable():
+        out = subprocess.run(
+            [sys.executable, "-c", _ENV_PRELUDE + COMMON_IMPORTS + code],
+            cwd=REPO_ROOT, capture_output=True, text=True, timeout=timeout)
+        assert out.returncode == 0, out.stderr[-3000:]
+        return out.stdout
+
+    src = os.path.join(REPO_ROOT, "src")
+    if src not in sys.path:
+        sys.path.insert(0, src)
+    g: dict = {}
+    buf = io.StringIO()
+    # exec has no subprocess timeout — use SIGALRM so a hung collective
+    # fails THIS test instead of stalling the whole ci.sh pass
+    def _alarm(signum, frame):
+        raise TimeoutError(f"multidevice snippet exceeded {timeout}s "
+                           f"in-process")
+    old_handler = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(timeout)
+    try:
+        with contextlib.redirect_stdout(buf):
+            exec(compile(COMMON_IMPORTS + code, "<multidevice>", "exec"), g)
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old_handler)
+        # snippets may activate() a process-global sharding ctx; never let
+        # it leak into the next in-process test
+        from repro.parallel import sharding
+        sharding.deactivate()
+    return buf.getvalue()

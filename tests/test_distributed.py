@@ -1,25 +1,10 @@
-"""Distributed-execution tests on 8 virtual CPU devices (subprocess so the
-XLA device-count flag never leaks into other tests)."""
-import subprocess
-import sys
-
+"""Distributed-execution tests on 8 virtual CPU devices (the `multidevice`
+marker: standalone runs spawn one subprocess per test so the XLA
+device-count flag never leaks; ci.sh batches them in one pass)."""
 import pytest
+from conftest import run_multidevice as run_sub
 
-
-def run_sub(code: str, timeout=600) -> str:
-    pre = (
-        'import os\n'
-        'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"\n'
-        'import sys\n'
-        'sys.path.insert(0, "src")\n'
-        'import jax, numpy as np\n'
-        'import jax.numpy as jnp\n'
-        'from jax.sharding import Mesh, NamedSharding, PartitionSpec as P\n'
-    )
-    out = subprocess.run([sys.executable, "-c", pre + code], cwd="/root/repo",
-                         capture_output=True, text=True, timeout=timeout)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
+pytestmark = pytest.mark.multidevice
 
 
 def test_sharded_train_step_matches_single_device():

@@ -6,8 +6,6 @@
   * sLSTM sequence == step-by-step decode
   * stack with scan_layers=True == unrolled stack
 """
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -15,7 +13,6 @@ import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
 from repro.configs import get_config
-from repro.configs.base import ModelConfig
 from repro.models import mamba as mb
 from repro.models import model as M
 from repro.models import moe as moe_mod
@@ -132,6 +129,45 @@ def test_moe_sort_dispatch_full_layer(seed):
                           capacity_factor=2.0)
     np.testing.assert_allclose(np.asarray(base), np.asarray(fast),
                                rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_moe_dispatch_parity_under_drops(seed):
+    """sort vs one-hot-cumsum dispatch assign identical ranks, so their
+    capacity-overflow DROP behavior matches too: at a squeezing capacity
+    factor both paths drop the same tokens and emit identical outputs."""
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)       # E=8, top-2
+    key = jax.random.PRNGKey(seed)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out_sort, aux_s = moe_mod.moe(p, x, cfg.replace(moe_dispatch="sort"),
+                                  capacity_factor=0.5)
+    out_cum, aux_c = moe_mod.moe(p, x, cfg.replace(moe_dispatch="cumsum"),
+                                 capacity_factor=0.5)
+    np.testing.assert_array_equal(np.asarray(out_sort), np.asarray(out_cum))
+    np.testing.assert_allclose(float(aux_s), float(aux_c), rtol=1e-6)
+    # cf=0.5 actually dropped something (else this test is vacuous)
+    full, _ = moe_mod.moe(p, x, cfg, capacity_factor=cfg.num_experts
+                          / cfg.experts_per_token)
+    assert not np.array_equal(np.asarray(out_sort), np.asarray(full))
+
+
+@pytest.mark.parametrize("dispatch", ["sort", "cumsum"])
+def test_moe_equals_reference_no_drop_both_dispatches(dispatch):
+    """moe() == dense all-experts moe_reference at no-drop capacity for
+    BOTH dispatch implementations."""
+    cfg = get_config("dbrx-132b", smoke=True).replace(moe_dispatch=dispatch)
+    key = jax.random.PRNGKey(3)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                          jnp.float32)
+    out, _ = moe_mod.moe(p, x, cfg, capacity_factor=cfg.num_experts
+                         / cfg.experts_per_token)
+    want = moe_mod.moe_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
 
 
 def test_moe_capacity_drops_bounded():

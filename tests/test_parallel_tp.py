@@ -1,34 +1,14 @@
-"""Tensor-parallel quantized execution on 8 virtual CPU devices (subprocess
-so the XLA device-count flag never leaks into other tests), plus unit tests
-for the version-portable shard_map compat layer."""
-import os
-import subprocess
-import sys
-
+"""Tensor-parallel quantized execution on 8 virtual CPU devices (the
+`multidevice` marker — see tests/conftest.py), plus unit tests for the
+version-portable shard_map compat layer."""
 import jax
 import pytest
+from conftest import run_multidevice as run_sub
 
 from repro.parallel import compat
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-
-def run_sub(code: str, timeout=600) -> str:
-    pre = (
-        'import os\n'
-        'os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"\n'
-        'import sys\n'
-        'sys.path.insert(0, "src")\n'
-        'import jax, numpy as np\n'
-        'import jax.numpy as jnp\n'
-        'from jax.sharding import Mesh, NamedSharding, PartitionSpec as P\n'
-    )
-    out = subprocess.run([sys.executable, "-c", pre + code], cwd=REPO_ROOT,
-                         capture_output=True, text=True, timeout=timeout)
-    assert out.returncode == 0, out.stderr[-3000:]
-    return out.stdout
-
-
+@pytest.mark.multidevice
 def test_tp_quant_matmul_bit_exact_all_bits():
     """K-sharded (int32 partial psum) and N-sharded (column-parallel) TP
     matmul == single-device quant_matmul, bit for bit, for 2/4/8-bit."""
@@ -60,6 +40,7 @@ print("TP_EXACT_OK")
     assert "TP_EXACT_OK" in out
 
 
+@pytest.mark.multidevice
 def test_tp_quant_matmul_respects_active_tp_rule():
     """With a sharding ctx active, tp resolves the physical axis from the
     logical `tp` rule instead of assuming an axis name."""
@@ -83,6 +64,7 @@ print("TP_RULE_OK")
     assert "TP_RULE_OK" in out
 
 
+@pytest.mark.multidevice
 def test_tp_quant_matmul_divisibility_error():
     out = run_sub("""
 from repro.parallel import tp
@@ -100,6 +82,7 @@ except ValueError as e:
     assert "TP_DIV_OK" in out
 
 
+@pytest.mark.multidevice
 def test_sharded_quantized_engine_decode():
     """Engine(mesh=...) with a pre-quantized parameter tree: the full
     continuous-batching loop (prefill + decode) completes tensor-parallel."""

@@ -88,24 +88,15 @@ def test_checkpoint_async_and_prune(tmp_path):
     assert steps == [3, 4]
 
 
+@pytest.mark.multidevice
 def test_checkpoint_elastic_reshard(tmp_path):
-    """Restore onto a different mesh topology (8 → 4 virtual devices).
-
-    Runs in a subprocess so the 8-device XLA flag doesn't leak."""
-    import subprocess
-    import sys
-    code = f"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import jax, numpy as np
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-import sys
-sys.path.insert(0, "src")
+    """Restore onto a different mesh topology (8 → 4 virtual devices)."""
+    from conftest import run_multidevice
+    out = run_multidevice(f"""
 from repro.checkpoint import ckpt
 
 tree = {{"w": jnp.arange(64.).reshape(8, 8)}}
-mesh8 = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+mesh8 = Mesh(np.array(jax.devices()[:8]).reshape(8), ("data",))
 sh8 = {{"w": NamedSharding(mesh8, P("data"))}}
 tree = jax.tree_util.tree_map(jax.device_put, tree, sh8)
 ckpt.save({str(tmp_path)!r}, 1, tree)
@@ -117,10 +108,8 @@ assert back["w"].sharding.mesh.shape["data"] == 4
 np.testing.assert_array_equal(np.asarray(back["w"]),
                               np.arange(64.).reshape(8, 8))
 print("ELASTIC_OK")
-"""
-    out = subprocess.run([sys.executable, "-c", code], cwd="/root/repo",
-                         capture_output=True, text=True)
-    assert "ELASTIC_OK" in out.stdout, out.stderr[-2000:]
+""")
+    assert "ELASTIC_OK" in out
 
 
 # --- data pipeline ----------------------------------------------------------
