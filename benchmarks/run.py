@@ -269,6 +269,76 @@ def bench_ep(fast=False):
              f"({us_rep / us_ep:.2f}x, int8, host-CPU interpret)")
 
 
+def bench_ep_dispatch(fast=False):
+    """Global vs per-source-capacity (GShard) `ep_moe` token dispatch:
+    wall time on 8 virtual devices, plus deterministic dropped-token
+    accounting from the single-device `ep.per_source_reference` simulator
+    — the lossy path's drop counts are part of its contract, so they gate
+    as a `deterministic` record."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import moe as moe_mod
+    from repro.parallel import ep
+
+    B, S = (2, 8) if fast else (4, 16)
+    T = B * S
+    payload = (
+        'from repro.configs import get_config\n'
+        'from repro.core import bramac_linear as bl\n'
+        'from repro.models import moe as moe_mod\n'
+        'from repro.parallel import ep, sharding as shd\n'
+        'mesh = shd.build_mesh("model=8")\n'
+        'cfg = get_config("qwen3-moe-30b-a3b", smoke=True)\n'
+        'key = jax.random.PRNGKey(0)\n'
+        'p = moe_mod.init_moe(key, cfg)\n'
+        'qp = bl.tree_prepare_serving(\n'
+        '    p, bl.QuantConfig(enabled=True, bits_w=8, bits_a=8))\n'
+        'x = jax.random.normal(jax.random.fold_in(key, 1),\n'
+        f'                      ({B}, {S}, cfg.d_model), jnp.float32)\n'
+        'fns = {tag: jax.jit(lambda q, xx, t=tag: ep.ep_moe(\n'
+        '    q, xx, cfg, mesh=mesh, capacity_factor=1.0, dispatch=t)[0])\n'
+        '       for tag in ("global", "per_source")}\n'
+        'rep = timed(lambda: fns["global"](qp, x))\n'
+        'us_ps = timed(lambda: fns["per_source"](qp, x))\n'
+        'print("EPDROW,global,%.1f,%.1f" % (rep, rep))\n'
+        'print("EPDROW,per_source,%.1f,%.1f" % (us_ps, rep))\n'
+    )
+    for tag, us, us_rep in _subprocess_bench(payload, "EPDROW",
+                                             f"ep_dispatch_8way_T{T}"):
+        _row(f"ep_dispatch_{tag}_8way_T{T}", us,
+             f"global {us_rep:.0f}us vs {tag} {us:.0f}us "
+             f"({us_rep / us:.2f}x, int8, host-CPU interpret)")
+
+    # deterministic drop accounting: per-source C_src = ceil(C/8) vs the
+    # global rule (== per-source at ep_size=1).  The gate exact-matches
+    # this row, so the routing must be platform/jax-version proof: one-hot
+    # tokens select integer-valued router rows ((t·13 + e·7) mod 31 is
+    # distinct within each row — no top_k tie), making keep counts pure
+    # integer bookkeeping like the closed-form paper rows.
+    import numpy as np
+
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    p = dict(moe_mod.init_moe(jax.random.PRNGKey(0), cfg))
+    E, k, d = cfg.num_experts, cfg.experts_per_token, cfg.d_model
+    feat = (np.arange(T) * 5) % d
+    router = ((feat[:, None] * 13 + np.arange(E)[None, :] * 7) % 31)
+    full = np.zeros((d, E), np.float32)
+    full[feat] = router                     # rows actually hit by a token
+    p["router"] = jnp.asarray(full)
+    x = jnp.asarray(np.eye(d, dtype=np.float32)[feat]).reshape(B, S, d)
+    Tk = T * k
+    t0 = time.perf_counter()
+    kept = {n: int(jnp.sum(ep.per_source_reference(
+        p, x, cfg, ep_size=n, capacity_factor=1.0)[2])) for n in (1, 8)}
+    us = (time.perf_counter() - t0) * 1e6
+    _row(f"ep_dispatch_drops_cf1.0_T{T}", us / 2,
+         f"kept global {kept[1]}/{Tk} vs per-source(8) {kept[8]}/{Tk} "
+         f"(cf=1.0; the two rules drop different tokens)",
+         deterministic=True)
+
+
 # --- Dry-run roofline summary (reads results if present) --------------------
 
 def bench_roofline():
@@ -311,6 +381,7 @@ def main() -> None:
         "kernels": lambda: bench_kernels(args.fast),
         "tp": lambda: bench_tp(args.fast),
         "ep": lambda: bench_ep(args.fast),
+        "ep_dispatch": lambda: bench_ep_dispatch(args.fast),
         "roofline": bench_roofline,
     }
     for name, fn in benches.items():

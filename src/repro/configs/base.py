@@ -43,6 +43,12 @@ class ModelConfig:
     #   cumsum: the original (T·k, E) one-hot cumsum — O(T·E) memory and
     #   quadratic-cost reduce-window lowering at 32k-token scale.  The
     #   §Perf baselines in EXPERIMENTS.md were recorded with "cumsum".
+    moe_capacity_factor: float = 1.25
+    ep_dispatch: str = "global"      # "global" | "per_source"
+    #   global: exact global-capacity buffers (all_gather combine);
+    #   per_source: GShard-style per-source capacity C_src = ceil(C/n) with
+    #   a mirrored all_to_all combine — lossy fast path, drops decided
+    #   shard-locally (see repro.parallel.ep).
 
     # --- attention ---
     rope_theta: float = 10_000.0

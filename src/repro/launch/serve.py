@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
         --requests 8 --new-tokens 12 [--quant-bits 4] \
-        [--shard 4 | --shard data=2,model=4]
+        [--shard 4 | --shard data=2,model=4] \
+        [--capacity-factor 1.0] [--dispatch per_source]
 """
 from __future__ import annotations
 
@@ -32,6 +33,14 @@ def main():
                     help="mesh over local devices: an int for model-parallel"
                          " ways, or a composed spec like 'data=2,model=4' /"
                          " '2x4' (empty or 0 = off)")
+    ap.add_argument("--capacity-factor", type=float, default=0.0,
+                    help="MoE expert-capacity factor (0 = config default, "
+                         "%(default)s); lower is lossier but faster")
+    ap.add_argument("--dispatch", default="",
+                    choices=("", "global", "per_source"),
+                    help="MoE EP token dispatch: 'global' exact buffers or "
+                         "'per_source' GShard-style lossy fast path "
+                         "(empty = config default)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -47,7 +56,8 @@ def main():
         except ValueError as e:
             raise SystemExit(f"--shard {args.shard!r}: {e}")
     eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
-                 mesh=mesh)
+                 mesh=mesh, capacity_factor=args.capacity_factor or None,
+                 dispatch=args.dispatch or None)
     rng = np.random.default_rng(0)
     reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
                                     size=int(rng.integers(4, 24))),

@@ -50,8 +50,42 @@ def init_moe(key, cfg):
     }
 
 
-def moe(p, x, cfg, capacity_factor: float = 1.25):
-    """x: (B, S, d) → (out, aux_loss)."""
+def moe_capacity(T: int, E: int, k: int, capacity_factor: float) -> int:
+    """Per-expert buffer rows C — the ONE formula every dispatch path
+    (dense, EP-global, EP-per-source and its reference) derives from, so
+    their drop semantics can only diverge by documented capacity math
+    (per-source uses C_src = ceil(C / ep_size) of this same C)."""
+    return int(max(1, round(T * k / E * capacity_factor)))
+
+
+def moe(p, x, cfg, capacity_factor: float | None = None,
+        dispatch: str | None = None):
+    """x: (B, S, d) → (out, aux_loss).
+
+    `capacity_factor` / `dispatch` default to `cfg.moe_capacity_factor` /
+    `cfg.ep_dispatch` (the knobs Engine and launch/serve.py plumb down).
+    dispatch="per_source" hands the WHOLE layer to `ep.ep_moe`'s lossy
+    GShard-style path when a sharding ctx is active and can token+expert-
+    shard it — forwarding the caller's `capacity_factor`, never ep_moe's
+    default (a silent mismatch between the sharded and dense paths,
+    regression-tested in tests/test_parallel_ep.py).  Without a ctx (or a
+    non-dividing mesh) it falls through to the dense path below, which is
+    exactly per-source semantics at ep_size=1 (C_src = C).
+    """
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    if dispatch is None:
+        dispatch = cfg.ep_dispatch
+    if dispatch not in ("global", "per_source"):
+        raise ValueError(f"ep_dispatch must be 'global' or 'per_source', "
+                         f"got {dispatch!r}")
+    if dispatch == "per_source":
+        ctx = sharding.active()
+        if ctx is not None and ep.layer_shardable(x, cfg, ctx):
+            return ep.ep_moe(p, x, cfg, mesh=ctx.mesh,
+                             capacity_factor=capacity_factor,
+                             dispatch="per_source")
+
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.experts_per_token
     T = B * S
@@ -63,14 +97,12 @@ def moe(p, x, cfg, capacity_factor: float = 1.25):
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
 
     # ---- capacity dispatch ----
-    C = int(max(1, round(T * k / E * capacity_factor)))
+    C = moe_capacity(T, E, k, capacity_factor)
     a = top_i.reshape(T * k)                                # assignments
     if cfg.moe_dispatch == "sort":
         pos = _rank_in_expert_sort(a, E)
     else:
-        onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)      # (T*k, E)
-        pos_in_e = jnp.cumsum(onehot, axis=0) - onehot      # rank in expert
-        pos = jnp.take_along_axis(pos_in_e, a[:, None], axis=1)[:, 0]
+        pos = _rank_in_expert_cumsum(a, E)
     keep = pos < C
     pos_c = jnp.where(keep, pos, C - 1)
 
@@ -95,6 +127,15 @@ def moe(p, x, cfg, capacity_factor: float = 1.25):
     frac_probs = jnp.mean(probs, axis=0)
     aux = E * jnp.sum(frac_tokens * frac_probs)
     return out, aux
+
+
+def _rank_in_expert_cumsum(a: jax.Array, E: int) -> jax.Array:
+    """The original one-hot running-count rank (moe_dispatch="cumsum") —
+    O(T·k, E) memory; kept as the §Perf baseline and property-tested
+    against the sort path in tests/test_moe_routing_properties.py."""
+    onehot = jax.nn.one_hot(a, E, dtype=jnp.int32)          # (T*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot          # rank in expert
+    return jnp.take_along_axis(pos_in_e, a[:, None], axis=1)[:, 0]
 
 
 def _rank_in_expert_sort(a: jax.Array, E: int) -> jax.Array:

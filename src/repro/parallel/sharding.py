@@ -45,6 +45,15 @@ class ShardingCtx:
             axes.append(phys)
         return P(*axes)
 
+    def phys_axis(self, logical: str) -> str | None:
+        """The single physical mesh axis `logical` maps to, or None when the
+        rule is absent, multi-axis, or names an axis this mesh doesn't have
+        (callers use this to decide whether a collective path can run)."""
+        phys = self.rules.get(logical)
+        if isinstance(phys, str) and phys in self.mesh.axis_names:
+            return phys
+        return None
+
 
 _ACTIVE: ShardingCtx | None = None
 

@@ -39,9 +39,22 @@ class Engine:
     tensor-parallel."""
 
     def __init__(self, cfg, params, num_slots: int, max_seq: int,
-                 eos_id: int | None = None, mesh=None):
+                 eos_id: int | None = None, mesh=None,
+                 capacity_factor: float | None = None,
+                 dispatch: str | None = None):
         # mesh may be a jax Mesh or a composed-mesh spec ("model=4",
         # "data=2,model=4", "2x4", 4, ...) resolved by sharding.build_mesh.
+        # capacity_factor / dispatch override the MoE routing knobs on cfg
+        # (moe_capacity_factor / ep_dispatch) for this engine — the jit'd
+        # prefill/decode close over cfg, so the override must happen here,
+        # before any tracing.
+        if dispatch is not None:
+            if dispatch not in ("global", "per_source"):
+                raise ValueError(f"dispatch must be 'global' or "
+                                 f"'per_source', got {dispatch!r}")
+            cfg = cfg.replace(ep_dispatch=dispatch)
+        if capacity_factor is not None:
+            cfg = cfg.replace(moe_capacity_factor=float(capacity_factor))
         if mesh is not None and not isinstance(mesh, jax.sharding.Mesh):
             mesh = shd.build_mesh(mesh)
         self.mesh = mesh

@@ -1,0 +1,140 @@
+"""Routing-invariant property tests for the MoE capacity dispatch.
+
+The capacity bookkeeping (rank-in-expert, keep masks, per-source C_src
+splits) is pure integer accounting that both `models.moe.moe` and
+`parallel.ep.ep_moe` build on; these properties pin its contract over
+random (T, E, k, capacity_factor):
+
+  * token conservation — kept + dropped == T·k, and kept is exactly
+    Σ_e min(count_e, C);
+  * rank-in-expert is a permutation of 0..count_e-1 within each expert,
+    for BOTH the argsort and the one-hot-cumsum implementations;
+  * dispatch is invariant under token permutation up to the documented
+    tie-break (earlier tokens win capacity): per-expert kept/dropped
+    COUNTS never change, only which tokens fill the slots;
+  * drop counts are monotonically non-increasing in capacity_factor;
+  * per-source (GShard) capacity keeps exactly Σ_s Σ_e min(count_se, C_src)
+    with C_src = ceil(C / ep_size) — shard-local drops only.
+
+hypothesis-optional per ROADMAP policy: `_hypothesis_compat` replays a
+deterministic example grid when the real library is absent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.models.moe import (_rank_in_expert_cumsum, _rank_in_expert_sort,
+                              moe_capacity)
+
+jax.config.update("jax_platform_name", "cpu")
+
+CF_GRID = [0.25, 0.5, 0.75, 1.0, 1.5, 2.0, 4.0]
+
+
+def _route(seed: int, T: int, E: int, k: int) -> np.ndarray:
+    """Realistic assignments: top-k over random logits (distinct experts
+    per token, like the real router) → flat (T*k,) expert ids."""
+    rng = np.random.default_rng(seed)
+    logits = jnp.asarray(rng.normal(size=(T, E)).astype(np.float32))
+    _, top_i = jax.lax.top_k(logits, k)
+    return np.asarray(top_i.reshape(T * k))
+
+
+def _rank_cumsum(a: np.ndarray, E: int) -> np.ndarray:
+    """The moe_dispatch="cumsum" rank path — the REAL one, imported, so
+    changes to moe() can't silently drift out from under this suite."""
+    return np.asarray(_rank_in_expert_cumsum(jnp.asarray(a), E))
+
+
+def _rank_sort(a: np.ndarray, E: int) -> np.ndarray:
+    return np.asarray(_rank_in_expert_sort(jnp.asarray(a), E))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), T=st.sampled_from([8, 16, 24, 32]),
+       E=st.sampled_from([2, 4, 8]), k=st.integers(1, 4),
+       cf=st.sampled_from(CF_GRID))
+def test_routing_token_conserving(seed, T, E, k, cf):
+    k = min(k, E)
+    a = _route(seed, T, E, k)
+    C = moe_capacity(T, E, k, cf)
+    keep = _rank_sort(a, E) < C
+    kept, dropped = int(keep.sum()), int((~keep).sum())
+    assert kept + dropped == T * k
+    counts = np.bincount(a, minlength=E)
+    assert kept == int(np.minimum(counts, C).sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), T=st.sampled_from([8, 16, 24, 32]),
+       E=st.sampled_from([2, 4, 8]), k=st.integers(1, 4))
+def test_rank_in_expert_is_permutation_both_paths(seed, T, E, k):
+    k = min(k, E)
+    a = _route(seed, T, E, k)
+    for pos in (_rank_sort(a, E), _rank_cumsum(a, E)):
+        for e in range(E):
+            ranks = np.sort(pos[a == e])
+            np.testing.assert_array_equal(ranks, np.arange(ranks.size))
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), T=st.sampled_from([8, 16, 24, 32]),
+       E=st.sampled_from([2, 4, 8]), k=st.integers(1, 4),
+       cf=st.sampled_from(CF_GRID))
+def test_dispatch_invariant_under_token_permutation(seed, T, E, k, cf):
+    """Permuting the token order permutes WHICH tokens win capacity (the
+    documented tie-break: earlier (token, k-slot) assignments win), but the
+    per-expert kept and dropped counts are order-free: min(count_e, C)."""
+    k = min(k, E)
+    rng = np.random.default_rng(seed)
+    logits = rng.normal(size=(T, E)).astype(np.float32)
+    perm = rng.permutation(T)
+    C = moe_capacity(T, E, k, cf)
+
+    def kept_per_expert(lg):
+        _, top_i = jax.lax.top_k(jnp.asarray(lg), k)
+        a = np.asarray(top_i.reshape(T * k))
+        keep = _rank_sort(a, E) < C
+        return np.bincount(a[keep], minlength=E), \
+            np.bincount(a[~keep], minlength=E)
+
+    kept0, drop0 = kept_per_expert(logits)
+    kept1, drop1 = kept_per_expert(logits[perm])
+    np.testing.assert_array_equal(kept0, kept1)
+    np.testing.assert_array_equal(drop0, drop1)
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), T=st.sampled_from([8, 16, 24, 32]),
+       E=st.sampled_from([2, 4, 8]), k=st.integers(1, 4))
+def test_drops_monotone_in_capacity_factor(seed, T, E, k):
+    k = min(k, E)
+    a = _route(seed, T, E, k)
+    pos = _rank_sort(a, E)
+    drops = [int((pos >= moe_capacity(T, E, k, cf)).sum())
+             for cf in sorted(CF_GRID)]
+    assert all(d0 >= d1 for d0, d1 in zip(drops, drops[1:])), drops
+    # and the no-drop capacity really keeps everything
+    assert int((pos >= moe_capacity(T, E, k, E / k)).sum()) == 0
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), T=st.sampled_from([8, 16, 24, 32]),
+       E=st.sampled_from([2, 4, 8]), k=st.integers(1, 4),
+       n=st.sampled_from([1, 2, 4]), cf=st.sampled_from(CF_GRID))
+def test_per_source_capacity_bookkeeping(seed, T, E, k, n, cf):
+    """The GShard per-source rule (shard-local ranks vs C_src = ceil(C/n))
+    keeps exactly Σ_s Σ_e min(count_se, C_src) tokens — drops never depend
+    on other shards' occupancy.  n=1 degenerates to the global rule."""
+    k = min(k, E)
+    a = _route(seed, T, E, k)
+    C = moe_capacity(T, E, k, cf)
+    Cs = -(-C // n)
+    blocks = a.reshape(n, (T // n) * k)
+    kept = sum(int((_rank_sort(b, E) < Cs).sum()) for b in blocks)
+    want = sum(int(np.minimum(np.bincount(b, minlength=E), Cs).sum())
+               for b in blocks)
+    assert kept == want
+    if n == 1:
+        assert kept == int(np.minimum(np.bincount(a, minlength=E), C).sum())

@@ -115,6 +115,78 @@ print("EP_MOE_OK")
 
 
 @pytest.mark.multidevice
+def test_ep_moe_per_source_no_drop_bit_exact():
+    """GShard per-source-capacity dispatch == single-device moe() bit for
+    bit at no-drop capacity (cf = E/k ⇒ C_src = T_local, nothing ever
+    overflows a shard-local buffer), for 2/4/8-bit AND float weights."""
+    out = run_sub("""
+from repro.configs import get_config
+from repro.core import bramac_linear as bl
+from repro.models import moe as moe_mod
+from repro.parallel import ep, sharding as shd
+
+mesh = shd.build_mesh("model=8")
+cfg = get_config("qwen3-moe-30b-a3b", smoke=True)   # E=8, top-2
+key = jax.random.PRNGKey(0)
+p = moe_mod.init_moe(key, cfg)
+x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                      jnp.float32)
+cf = cfg.num_experts / cfg.experts_per_token
+for bits in (2, 4, 8):
+    qp = bl.tree_prepare_serving(
+        p, bl.QuantConfig(enabled=True, bits_w=bits, bits_a=8))
+    ref, aux_ref = moe_mod.moe(qp, x, cfg, capacity_factor=cf)
+    got, aux, keep = ep.ep_moe(qp, x, cfg, mesh=mesh, capacity_factor=cf,
+                               dispatch="per_source", return_drops=True)
+    assert bool(jnp.all(keep)), bits                 # truly no drops
+    assert bool(jnp.all(got == ref)), bits
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
+ref, _ = moe_mod.moe(p, x, cfg, capacity_factor=cf)
+got, _ = ep.ep_moe(p, x, cfg, mesh=mesh, capacity_factor=cf,
+                   dispatch="per_source")
+assert bool(jnp.all(got == ref))
+print("EP_PS_NODROP_OK")
+""")
+    assert "EP_PS_NODROP_OK" in out
+
+
+@pytest.mark.multidevice
+def test_ep_moe_per_source_matches_reference_tight_capacity():
+    """At tight capacity the lossy per-source path == the single-device
+    `ep.per_source_reference` simulator bit for bit — values AND the drop
+    mask — for 2/4/8-bit; and it genuinely drops (≠ the global path)."""
+    out = run_sub("""
+from repro.configs import get_config
+from repro.core import bramac_linear as bl
+from repro.models import moe as moe_mod
+from repro.parallel import ep, sharding as shd
+
+mesh = shd.build_mesh("model=8")
+cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+key = jax.random.PRNGKey(0)
+p = moe_mod.init_moe(key, cfg)
+x = jax.random.normal(jax.random.fold_in(key, 1), (2, 8, cfg.d_model),
+                      jnp.float32)
+for bits in (2, 4, 8):
+    qp = bl.tree_prepare_serving(
+        p, bl.QuantConfig(enabled=True, bits_w=bits, bits_a=8))
+    got, aux, keep = ep.ep_moe(qp, x, cfg, mesh=mesh, capacity_factor=1.0,
+                               dispatch="per_source", return_drops=True)
+    want, aux_ref, keep_ref = ep.per_source_reference(
+        qp, x, cfg, ep_size=8, capacity_factor=1.0)
+    assert bool(jnp.all(keep == keep_ref)), bits
+    assert bool(jnp.all(got == want)), bits
+    assert not bool(jnp.all(keep)), bits             # tight cf does drop
+    np.testing.assert_allclose(float(aux), float(aux_ref), rtol=1e-5)
+    exact, _ = ep.ep_moe(qp, x, cfg, mesh=mesh, capacity_factor=1.0,
+                         dispatch="global")
+    assert not bool(jnp.all(got == exact)), bits     # lossy != exact
+print("EP_PS_TIGHT_OK")
+""")
+    assert "EP_PS_TIGHT_OK" in out
+
+
+@pytest.mark.multidevice
 def test_moe_routes_through_ep_when_mesh_active():
     """With a sharding ctx active, moe()'s quantized expert compute routes
     through the expert-parallel shard_map einsum — same bits out."""
@@ -169,6 +241,62 @@ assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out_tokens)
 print("ENGINE_EP_OK")
 """)
     assert "ENGINE_EP_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# in-process: capacity_factor forwarding (regression) — a 1-device mesh is
+# enough to activate the EP route, so this runs in the plain pytest pass
+# ---------------------------------------------------------------------------
+
+def test_moe_forwards_capacity_factor_to_ep_route():
+    """Regression: when moe() hands the layer to ep.ep_moe (per-source
+    dispatch under an active ctx), it must reuse the CALLER's
+    capacity_factor — not ep_moe's own default — or the sharded and dense
+    paths silently disagree on what gets dropped."""
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.core import bramac_linear as bl
+    from repro.models import moe as moe_mod
+    from repro.parallel import ep
+
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True).replace(
+        ep_dispatch="per_source")
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, cfg)
+    qp = bl.tree_prepare_serving(
+        p, bl.QuantConfig(enabled=True, bits_w=8, bits_a=8))
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    shd.activate(shd.build_mesh("model=1"))
+    try:
+        got, _ = moe_mod.moe(qp, x, cfg, capacity_factor=0.5)
+    finally:
+        shd.deactivate()
+    want, _, keep = ep.per_source_reference(qp, x, cfg, ep_size=1,
+                                            capacity_factor=0.5)
+    assert bool(jnp.all(got == want))
+    assert not bool(jnp.all(keep))          # tight cf really dropped
+    # the forwarded cf must have MATTERED (ep_moe's default would differ)
+    bad, _, _ = ep.per_source_reference(qp, x, cfg, ep_size=1,
+                                        capacity_factor=1.25)
+    assert not bool(jnp.all(got == bad))
+    # and with no ctx, per_source falls through to the dense path, which
+    # is per-source semantics at ep_size=1 — same bits
+    dense, _ = moe_mod.moe(qp, x, cfg, capacity_factor=0.5)
+    assert bool(jnp.all(dense == want))
+
+
+def test_moe_rejects_unknown_dispatch():
+    from repro.configs import get_config
+    from repro.models import moe as moe_mod
+
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    p = moe_mod.init_moe(key, cfg)
+    x = jax.numpy.zeros((1, 8, cfg.d_model), jax.numpy.float32)
+    with pytest.raises(ValueError, match="ep_dispatch"):
+        moe_mod.moe(p, x, cfg, dispatch="bogus")
 
 
 # ---------------------------------------------------------------------------

@@ -83,6 +83,31 @@ def test_engine_uids_unique_after_queue_drain():
     assert r3.done
 
 
+def test_engine_threads_capacity_factor_and_dispatch():
+    """Engine(capacity_factor=..., dispatch=...) overrides the MoE routing
+    knobs on cfg BEFORE any tracing, so the jit'd prefill/decode close over
+    them — and the continuous-batching loop still completes on a quantized
+    MoE arch with the lossy per-source dispatch requested."""
+    from repro.runtime.serve import Engine
+
+    cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    qparams = bl.tree_prepare_serving(params, QCFG8)
+    eng = Engine(cfg, qparams, num_slots=2, max_seq=32,
+                 capacity_factor=2.0, dispatch="per_source")
+    assert eng.cfg.moe_capacity_factor == 2.0
+    assert eng.cfg.ep_dispatch == "per_source"
+    assert cfg.moe_capacity_factor == 1.25      # caller's cfg untouched
+    reqs = [eng.submit([1, 2, 3], max_new_tokens=3),
+            eng.submit([4, 5], max_new_tokens=3)]
+    eng.run()
+    eng.close()
+    assert all(r.done and len(r.out_tokens) == 3 for r in reqs)
+    assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out_tokens)
+    with pytest.raises(ValueError, match="dispatch"):
+        Engine(cfg, qparams, num_slots=1, max_seq=8, dispatch="bogus")
+
+
 def test_serve_einsum_edf_matches_float():
     rng = np.random.default_rng(0)
     E, C, d, f = 4, 8, 32, 16
