@@ -19,11 +19,12 @@ from repro.runtime.serve import Engine
 
 
 def run(cfg, params, prompts, new_tokens):
-    eng = Engine(cfg, params, num_slots=4, max_seq=96)
-    reqs = [eng.submit(p, new_tokens) for p in prompts]
-    t0 = time.time()
-    eng.run()
-    dt = time.time() - t0
+    with Engine(cfg, params, num_slots=4, max_seq=96,
+                decode_steps=4) as eng:
+        reqs = [eng.submit(p, new_tokens) for p in prompts]
+        t0 = time.time()
+        eng.run()
+        dt = time.time() - t0
     toks = sum(len(r.out_tokens) for r in reqs)
     return [r.out_tokens for r in reqs], toks / dt
 

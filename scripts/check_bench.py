@@ -4,8 +4,10 @@
 
 Policy (documented in ROADMAP.md §CI):
   * `deterministic` records reproduce paper quantities (Table II, Figs
-    7/9/10/11/13) — their `derived` strings must match the baseline
-    EXACTLY; any drift is a correctness regression, not noise.
+    7/9/10/11/13) or integer engine bookkeeping (the MoE drop counts, the
+    serving engine's generated-token/tick schedule) — their `derived`
+    strings must match the baseline EXACTLY; any drift is a correctness
+    regression, not noise.
   * every baseline record must still be produced (a missing row means a
     bench crashed or a distributed subprocess failed);
   * wall times are gated with a deliberately generous tolerance

@@ -3,7 +3,9 @@
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --smoke \
         --requests 8 --new-tokens 12 [--quant-bits 4] \
         [--shard 4 | --shard data=2,model=4] \
-        [--capacity-factor 1.0] [--dispatch per_source]
+        [--capacity-factor 1.0] [--dispatch per_source] \
+        [--sampling top_p --temperature 0.8 --top-p 0.95] \
+        [--decode-steps 8] [--prefill-chunk 16]
 """
 from __future__ import annotations
 
@@ -41,6 +43,23 @@ def main():
                     help="MoE EP token dispatch: 'global' exact buffers or "
                          "'per_source' GShard-style lossy fast path "
                          "(empty = config default)")
+    ap.add_argument("--sampling", default="greedy",
+                    choices=("greedy", "temperature", "top_k", "top_p"),
+                    help="on-device sampling method (%(default)s)")
+    ap.add_argument("--temperature", type=float, default=1.0,
+                    help="softmax temperature for stochastic sampling")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="k for --sampling top_k")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus mass for --sampling top_p")
+    ap.add_argument("--decode-steps", type=int, default=1,
+                    help="decode steps fused per engine tick: host syncs "
+                         "per generated token scale as 1/decode_steps")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="prompt chunk size for admission prefill "
+                         "(recurrent archs always use 1)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="engine base seed for request sampling streams")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -55,22 +74,33 @@ def main():
             mesh = shd.build_mesh(args.shard)
         except ValueError as e:
             raise SystemExit(f"--shard {args.shard!r}: {e}")
-    eng = Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
-                 mesh=mesh, capacity_factor=args.capacity_factor or None,
-                 dispatch=args.dispatch or None)
     rng = np.random.default_rng(0)
-    reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
-                                    size=int(rng.integers(4, 24))),
-                       args.new_tokens)
-            for _ in range(args.requests)]
-    t0 = time.time()
-    eng.run()
-    dt = time.time() - t0
-    done = sum(r.done for r in reqs)
-    toks = sum(len(r.out_tokens) for r in reqs)
-    print(f"{done}/{len(reqs)} requests done, {toks} tokens in {dt:.1f}s "
-          f"({toks / dt:.1f} tok/s, quant="
-          f"{'int%d' % args.quant_bits if args.quant_bits else 'off'})")
+    # the context manager releases the process-global sharding ctx even if
+    # serving raises mid-run
+    with Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
+                mesh=mesh, capacity_factor=args.capacity_factor or None,
+                dispatch=args.dispatch or None, sampling=args.sampling,
+                temperature=args.temperature, top_k=args.top_k,
+                top_p=args.top_p, decode_steps=args.decode_steps,
+                prefill_chunk=args.prefill_chunk, seed=args.seed) as eng:
+        reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
+                                        size=int(rng.integers(4, 24))),
+                           args.new_tokens)
+                for _ in range(args.requests)]
+        t0 = time.perf_counter()    # Request.t_first is perf_counter-based
+        eng.run()
+        dt = time.perf_counter() - t0
+        done = sum(r.done for r in reqs)
+        toks = sum(len(r.out_tokens) for r in reqs)
+        ttft = [r.t_first - t0 for r in reqs if r.t_first]
+        print(f"{done}/{len(reqs)} requests done, {toks} tokens in {dt:.1f}s "
+              f"({toks / dt:.1f} tok/s, quant="
+              f"{'int%d' % args.quant_bits if args.quant_bits else 'off'}, "
+              f"sampling={args.sampling})")
+        print(f"  {eng.n_syncs} host syncs for {eng.n_generated} tokens "
+              f"({eng.n_syncs / max(eng.n_generated, 1):.2f} syncs/tok at "
+              f"decode_steps={args.decode_steps}); mean ttft "
+              f"{1e3 * float(np.mean(ttft)) if ttft else 0.0:.0f}ms")
 
 
 if __name__ == "__main__":

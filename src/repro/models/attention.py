@@ -67,9 +67,21 @@ def causal_attention(q, k, v, q_offset=0):
 
 
 def decode_attention(q, k_cache, v_cache, pos):
-    """q: (B,1,H,hd); caches: (B,S,Hkv,hd); pos: (B,) current lengths."""
+    """Single-token decode: the pos-masked cache attention of
+    chunk_attention at Sq=1.  q: (B,1,H,hd); pos: (B,) current lengths."""
+    return chunk_attention(q, k_cache, v_cache, pos[:, None])
+
+
+def chunk_attention(q, k_cache, v_cache, positions):
+    """Causal attention of a prefill chunk at an arbitrary offset.
+
+    q: (B,Sq,H,hd) chunk queries; caches: (B,S_max,Hkv,hd) already updated
+    with this chunk's K/V; positions: (B,Sq) absolute query positions.
+    Each query row attends every cache row at or before its own position —
+    at offset 0 this reduces to plain causal prefill (rows past the chunk
+    are masked to exact zeros), and at offset>0 it sees all earlier chunks."""
     Sk = k_cache.shape[1]
-    mask = jnp.arange(Sk)[None, None, :] <= pos[:, None, None]  # (B,1,Sk)
+    mask = jnp.arange(Sk)[None, None, :] <= positions[:, :, None]  # (B,Sq,Sk)
     return _attend(q, k_cache, v_cache, mask[:, None])
 
 
@@ -102,18 +114,16 @@ def gqa(p, x, cfg, positions, cache=None, cache_pos=None):
         out = causal_attention(q, k, v)
         new_cache = None
     elif "ks" in cache:                          # int8 KV cache (quant_kv)
+        # decode and prefill chunks both attend the stored int8 rows
+        # (earlier chunks only exist quantized) via the same masked path
         new_cache = _update_cache_q(cache, k, v, cache_pos)
-        if S == 1:
-            out = decode_attention_q(q, new_cache, cache_pos)
-        else:                                    # prefill: attend in bf16
-            out = causal_attention(q, k, v)
+        out = decode_attention_q(q, new_cache, positions)
     else:
         kc = _update_cache(cache["k"], k, cache_pos)
         vc = _update_cache(cache["v"], v, cache_pos)
-        if S == 1:
-            out = decode_attention(q, kc, vc, cache_pos)
-        else:                                    # prefill into cache
-            out = causal_attention(q, kc[:, :S], vc[:, :S])
+        # decode (S=1, positions == cache_pos) and prefill chunks share
+        # the same masked path over the cache
+        out = chunk_attention(q, kc, vc, positions)
         new_cache = {"k": kc, "v": vc}
     return dense(out.reshape(B, S, H * hd), p["wo"], cfg.quant), new_cache
 
@@ -165,36 +175,38 @@ def _update_cache_q(cache, k, v, pos):
             "vs": _update_cache(cache["vs"], vs, pos)}
 
 
-def decode_attention_q(q, cache, pos):
-    """Single-token attention over the int8 cache.
+def decode_attention_q(q, cache, positions):
+    """Attention over the int8 cache — decode (Sq=1) and offset prefill
+    chunks (Sq=C) alike; positions: (B, Sq) absolute query positions.
 
     Both dots run int8×int8→int32 on the MXU (the nd=1 endpoint of the
     BRAMAC digit loop): Q is row-quantized on the fly; K's scales factor
     out of the score dot; V's *per-position* scales fold into the
     probabilities elementwise before the PV dot, so V is consumed as
     stored int8 — no dequantized cache copy is ever materialized."""
-    B, one, H, hd = q.shape
+    B, Sq, H, hd = q.shape
     kc, ks, vc, vs = cache["k"], cache["ks"], cache["v"], cache["vs"]
     Sk, Hkv = kc.shape[1], kc.shape[2]
     group = H // Hkv
-    qq, qs = _quant_rows(q)                                 # (B,1,H,hd),(B,1,H)
-    qg = qq.reshape(B, 1, Hkv, group, hd)
+    qq, qs = _quant_rows(q)                              # (B,Sq,H,hd),(B,Sq,H)
+    qg = qq.reshape(B, Sq, Hkv, group, hd)
     scores_i = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kc,      # int8 MXU dot
                           preferred_element_type=jnp.int32)
-    qs_g = qs.reshape(B, 1, Hkv, group).transpose(0, 2, 3, 1)  # (B,Hkv,g,1)
+    qs_g = qs.reshape(B, Sq, Hkv, group).transpose(0, 2, 3, 1)  # (B,Hkv,g,Sq)
     scores = scores_i.astype(jnp.float32) \
         * qs_g[..., None] * ks.transpose(0, 2, 1)[:, :, None, None, :]
     scores = scores / math.sqrt(hd)
-    mask = (jnp.arange(Sk)[None, :] <= pos[:, None])[:, None, None, None]
+    mask = (jnp.arange(Sk)[None, None, :]
+            <= positions[:, :, None])[:, None, None]     # (B,1,1,Sq,Sk)
     probs = jax.nn.softmax(jnp.where(mask, scores, -1e30), axis=-1)
     # fold per-position V scales into the probabilities, requantize rows
-    pv = probs * vs.transpose(0, 2, 1)[:, :, None, None, :]  # (B,Hkv,g,1,Sk)
+    pv = probs * vs.transpose(0, 2, 1)[:, :, None, None, :]  # (B,Hkv,g,Sq,Sk)
     pq, pscale = _quant_rows(pv)
     out_i = jnp.einsum("bhgqk,bkhd->bqhgd", pq, vc,
                        preferred_element_type=jnp.int32)
     out = out_i.astype(jnp.float32) \
-        * pscale.transpose(0, 3, 1, 2)[..., None]            # (B,1,Hkv,g,1)
-    return out.reshape(B, 1, H, hd).astype(q.dtype)
+        * pscale.transpose(0, 3, 1, 2)[..., None]            # (B,Sq,Hkv,g,1)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -253,8 +265,8 @@ def mla(p, x, cfg, positions, cache=None, cache_pos=None):
         axis=-1)
     q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    if cache is not None and S == 1:
-        out = decode_attention(q_full, k, v, cache_pos)
+    if cache is not None:                        # decode or prefill chunk
+        out = chunk_attention(q_full, k, v, positions)
     else:
         out = causal_attention(q_full, k[:, :S], v[:, :S])
     return dense(out.reshape(B, S, H * vd), p["wo"], cfg.quant), new_cache

@@ -40,15 +40,20 @@ def _inputs_to_hidden(params, batch, cfg):
 
 
 def forward(params, batch, cfg: ModelConfig, caches=None, cache_pos=None,
-            last_only: bool = False):
+            last_only: bool = False, gather_pos=None):
     """Returns (logits, aux_loss, new_caches).
 
     last_only: unembed only the final position — prefill at 32k would
-    otherwise materialize a (B, 32768, vocab) logits tensor."""
+    otherwise materialize a (B, 32768, vocab) logits tensor.
+    gather_pos: (B,) per-sequence position to unembed instead (chunked
+    prefill: each slot's true last prompt token sits at a different row);
+    returns (B, 1, vocab) logits like last_only."""
     x = _inputs_to_hidden(params, batch, cfg)
     B, S = x.shape[:2]
-    if cache_pos is not None and S == 1:
-        positions = cache_pos[:, None]
+    if cache_pos is not None:
+        # serving: absolute positions start at each sequence's cache_pos —
+        # S == 1 is a decode step, S > 1 a (possibly offset) prefill chunk
+        positions = cache_pos[:, None] + jnp.arange(S, dtype=jnp.int32)[None]
     else:
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
                                      (B, S))
@@ -60,6 +65,8 @@ def forward(params, batch, cfg: ModelConfig, caches=None, cache_pos=None,
         caches=caches, cache_pos=cache_pos)
     if last_only:
         x = x[:, -1:]
+    elif gather_pos is not None:
+        x = jnp.take_along_axis(x, gather_pos[:, None, None], axis=1)
     x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
     logits = unembed(params["embed"], x, cfg.quant)
     return constrain(logits, "batch", None, "tp"), aux, new_caches

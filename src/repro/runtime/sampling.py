@@ -1,0 +1,78 @@
+"""On-device token sampling for the serving engine.
+
+Sampling runs *inside* the jit'd engine tick (runtime/serve.py) so the
+host never sees logits: each slot carries its own PRNG key chain in the
+device-resident `SlotState`, and a tick emits tokens directly.  The key
+chain is derived from the per-request seed alone (not the slot index), so
+a request's stream is reproducible regardless of which slot it lands in
+or what else is batched alongside it.
+
+Methods:
+  greedy      — argmax; consumes no randomness (keys pass through).
+  temperature — softmax sample of logits / temperature.
+  top_k       — temperature sample restricted to the k highest logits.
+  top_p       — temperature sample restricted to the smallest prefix of
+                the sorted distribution with cumulative mass >= top_p
+                (the best token is always kept).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+METHODS = ("greedy", "temperature", "top_k", "top_p")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    method: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"sampling method must be one of {METHODS}, "
+                             f"got {self.method!r}")
+        if self.temperature <= 0.0:
+            raise ValueError(f"temperature must be > 0, "
+                             f"got {self.temperature}")
+        if self.method == "top_k" and self.top_k < 1:
+            raise ValueError(f"top_k sampling needs top_k >= 1, "
+                             f"got {self.top_k}")
+        if self.method == "top_p" and not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+
+def request_keys(base_key, seeds):
+    """Per-request starting keys: (B,) i32 seeds -> (B, 2) u32 keys.
+
+    Derived from the request seed only, never the slot index."""
+    return jax.vmap(lambda s: jax.random.fold_in(base_key, s))(seeds)
+
+
+def sample(logits, keys, sc: SamplingConfig):
+    """logits (B, V), keys (B, 2) u32 -> (tokens (B,) i32, new_keys).
+
+    Stochastic methods split each row's key once per emitted token;
+    greedy returns the keys untouched."""
+    if sc.method == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+    pairs = jax.vmap(jax.random.split)(keys)            # (B, 2, 2)
+    new_keys, subs = pairs[:, 0], pairs[:, 1]
+    l = logits.astype(jnp.float32) / sc.temperature
+    if sc.method == "top_k":
+        k = min(sc.top_k, l.shape[-1])
+        kth = jax.lax.top_k(l, k)[0][:, -1]             # k-th largest per row
+        l = jnp.where(l >= kth[:, None], l, -jnp.inf)
+    elif sc.method == "top_p":
+        srt = jnp.sort(l, axis=-1)[:, ::-1]             # descending
+        probs = jax.nn.softmax(srt, axis=-1)
+        before = jnp.cumsum(probs, axis=-1) - probs     # mass strictly above
+        keep = before < sc.top_p                        # best always kept
+        thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1)
+        l = jnp.where(l >= thresh[:, None], l, -jnp.inf)
+    toks = jax.vmap(jax.random.categorical)(subs, l)
+    return toks.astype(jnp.int32), new_keys

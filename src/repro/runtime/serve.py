@@ -1,17 +1,40 @@
-"""Batched serving engine: slot-based continuous batching, greedy sampling,
-optional BRAMAC-quantized weights (the paper's inference deployment mode).
+"""Device-resident continuous-batching engine (the paper's §VI-D
+tiling-based inference mode: quantized weights stay resident, inputs
+stream).
 
-The engine owns a fixed pool of `num_slots` sequences sharing one KV cache.
-Requests are admitted into free slots (prefill writes the slot's cache
-rows), and a single jit'd decode step advances *all* active slots each
-tick — finished or empty slots are masked.  This is the tiling-based
-inference pattern of §VI-D: weights stay resident while inputs stream.
+The engine owns a fixed pool of `num_slots` sequences sharing one KV
+cache, plus a `SlotState` pytree (last token, position, budget, active
+mask, per-slot PRNG key) that lives on device for the engine's lifetime.
+The serving loop is compiled data-flow, not Python control-flow — two
+jit'd functions do all the work:
+
+  admit  — chunked prefill: every queued prompt is cut into fixed-size
+           chunks (`prefill_chunk`; 1 for recurrent mixers, which cannot
+           skip padding in their state) and one compiled function per
+           chunk prefills ALL admitting slots at once: full-batch forward
+           at per-slot cache offsets, masked merge of the touched slots'
+           cache rows, and — on each prompt's final chunk — on-device
+           sampling of the first token and the slot-state commit.  No
+           per-prompt-length recompiles, no host-side full-cache scatter.
+
+  tick   — fused multi-step decode: `decode_steps` iterations of
+           decode -> sample (greedy / temperature / top-k / top-p, keyed
+           by the per-request seed) -> EOS + budget + max_seq termination
+           masking, rolled into ONE jit via `lax.scan`.  The host syncs
+           once per tick — i.e. once per `decode_steps` tokens — and gets
+           back the (steps, slots) token block plus emission masks.
+
+The Python `Engine` is a thin wrapper holding the request queue and the
+host mirror of slot occupancy; it is also a context manager so the
+process-global sharding ctx activated by `mesh=` is released even when
+serving raises.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any
+import time
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +42,16 @@ import numpy as np
 
 from repro.models import model as M
 from repro.parallel import sharding as shd
+from repro.runtime import sampling as smp
+
+
+class SlotState(NamedTuple):
+    """Per-slot decode state; one device-resident pytree for all slots."""
+    last_tok: jax.Array     # (S,) i32  last sampled token (next decode input)
+    pos: jax.Array          # (S,) i32  next cache index to write
+    budget: jax.Array       # (S,) i32  tokens still to emit after this one
+    active: jax.Array       # (S,) bool slot is mid-generation
+    rng: jax.Array          # (S, 2) u32 per-request sampling key chain
 
 
 @dataclasses.dataclass
@@ -26,8 +59,11 @@ class Request:
     uid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int
+    seed: int = 0
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0          # wall time the first token landed (TTFT)
 
 
 class Engine:
@@ -36,12 +72,30 @@ class Engine:
     all-gathers) is activated for the engine's lifetime and the parameter
     tree — float or pre-quantized `QuantizedTensor` leaves alike — is
     placed onto the mesh, so every jit'd prefill/decode below runs
-    tensor-parallel."""
+    tensor-parallel.
+
+    Sampling and scheduling knobs (all baked into the compiled functions,
+    so they must be set at construction):
+      sampling      — "greedy" | "temperature" | "top_k" | "top_p", or a
+                      ready-made `sampling.SamplingConfig`
+      temperature / top_k / top_p — parameters of the stochastic methods
+      decode_steps  — decode steps fused per tick (host syncs per
+                      generated token scale as 1/decode_steps)
+      prefill_chunk — prompt chunk size for admission (forced to 1 on
+                      recurrent mixers); one jit serves every length
+      seed          — engine base seed; a request's stream is keyed by
+                      fold_in(base, request.seed) only, so it reproduces
+                      across slots and co-batched traffic
+    """
 
     def __init__(self, cfg, params, num_slots: int, max_seq: int,
                  eos_id: int | None = None, mesh=None,
                  capacity_factor: float | None = None,
-                 dispatch: str | None = None):
+                 dispatch: str | None = None,
+                 sampling: str | smp.SamplingConfig = "greedy",
+                 temperature: float = 1.0, top_k: int = 0, top_p: float = 1.0,
+                 decode_steps: int = 1, prefill_chunk: int = 16,
+                 seed: int = 0):
         # mesh may be a jax Mesh or a composed-mesh spec ("model=4",
         # "data=2,model=4", "2x4", 4, ...) resolved by sharding.build_mesh.
         # capacity_factor / dispatch override the MoE routing knobs on cfg
@@ -55,6 +109,12 @@ class Engine:
             cfg = cfg.replace(ep_dispatch=dispatch)
         if capacity_factor is not None:
             cfg = cfg.replace(moe_capacity_factor=float(capacity_factor))
+        if isinstance(sampling, str):
+            sampling = smp.SamplingConfig(method=sampling,
+                                          temperature=temperature,
+                                          top_k=top_k, top_p=top_p)
+        if decode_steps < 1:
+            raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
         if mesh is not None and not isinstance(mesh, jax.sharding.Mesh):
             mesh = shd.build_mesh(mesh)
         self.mesh = mesh
@@ -67,98 +127,233 @@ class Engine:
         self.cfg, self.params = cfg, params
         self.num_slots, self.max_seq = num_slots, max_seq
         self.eos_id = eos_id
-        self._next_uid = itertools.count()
-        self.caches = M.init_cache(cfg, num_slots, max_seq)
-        self.slot_req: list[Request | None] = [None] * num_slots
-        self.positions = np.zeros((num_slots,), np.int32)
-        self.budgets = np.zeros((num_slots,), np.int32)
-        self.last_tok = np.zeros((num_slots,), np.int32)
-        self._queue: list[Request] = []
-        self._decode = jax.jit(
-            lambda p, t, c, q: M.decode_step(p, t, cfg, c, q))
-        # prefill is jit'd per prompt length (padded to buckets of 16);
-        # recurrent mixers (mamba/xlstm) can't skip padding in their state,
-        # so those archs prefill at exact length (bucket = 1)
+        self.sampling = sampling
+        self.decode_steps = decode_steps
+        # recurrent mixers (mamba/mlstm/slstm) can't skip padding in their
+        # state, so their prompts are fed token-by-token (chunk = 1); a
+        # chunk can never exceed the cache (its write must fit max_seq)
         recurrent = any(m in spec for spec in cfg.layer_pattern
                         for m in ("mamba", "mlstm", "slstm"))
-        self._bucket_q = 1 if recurrent else 16
-        self._prefills: dict[int, Any] = {}
+        self.prefill_chunk = 1 if recurrent \
+            else max(1, min(prefill_chunk, max_seq - 1))
+        self._next_uid = itertools.count()
+        self._base_key = jax.random.PRNGKey(seed)
+        self.caches = M.init_cache(cfg, num_slots, max_seq)
+        self.state = SlotState(
+            last_tok=jnp.zeros((num_slots,), jnp.int32),
+            pos=jnp.zeros((num_slots,), jnp.int32),
+            budget=jnp.zeros((num_slots,), jnp.int32),
+            active=jnp.zeros((num_slots,), bool),
+            rng=jnp.zeros((num_slots, 2), jnp.uint32))
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self._queue: list[Request] = []
+        # host<->device sync accounting for the serving bench: one sync per
+        # jit'd tick / per admission round, regardless of decode_steps
+        self.n_ticks = 0
+        self.n_admit_calls = 0
+        self.n_syncs = 0
+        self.n_generated = 0
+        # buffer donation lets caches/state update in place; the CPU
+        # backend doesn't implement donation and would warn on every call
+        donate = () if jax.default_backend() == "cpu" else (1, 2)
+        self._tick = jax.jit(self._make_tick(), donate_argnums=donate)
+        self._admit_chunk = jax.jit(self._make_admit_chunk(),
+                                    donate_argnums=donate)
 
     # ------------------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int = 16) -> Request:
+    # compiled data-flow
+    # ------------------------------------------------------------------
+
+    def _make_tick(self):
+        """N fused decode steps: decode -> sample -> terminate, scanned."""
+        cfg, sc = self.cfg, self.sampling
+        eos, max_seq, steps = self.eos_id, self.max_seq, self.decode_steps
+
+        def tick(params, state, caches):
+            def body(carry, _):
+                state, caches = carry
+                logits, caches = M.decode_step(
+                    params, state.last_tok[:, None], cfg, caches, state.pos)
+                toks, keys = smp.sample(logits, state.rng, sc)
+                emit = state.active
+                tok = jnp.where(emit, toks, state.last_tok)
+                rng = jnp.where(emit[:, None], keys, state.rng)
+                pos = jnp.where(emit, state.pos + 1, state.pos)
+                budget = jnp.where(emit, state.budget - 1, state.budget)
+                hit_eos = (emit & (tok == eos)) if eos is not None \
+                    else jnp.zeros_like(emit)
+                active = emit & (budget > 0) & ~hit_eos & (pos < max_seq - 1)
+                new = SlotState(tok, pos, budget, active, rng)
+                return (new, caches), (tok, emit)
+
+            (state, caches), (toks, emitted) = jax.lax.scan(
+                body, (state, caches), None, length=steps)
+            return state, caches, toks, emitted
+
+        return tick
+
+    def _make_admit_chunk(self):
+        """One prefill chunk for every admitting slot, in one call.
+
+        tokens (S, C) holds each admitting slot's chunk (garbage rows for
+        slots mid-decode are masked out of the cache merge); offsets are
+        the per-slot chunk starts.  Rows whose chunk completes the prompt
+        (`final`) sample their first token on device and commit the slot
+        state; the sampled tokens come back so the host can append them."""
+        cfg, sc = self.cfg, self.sampling
+        eos, max_seq, ns = self.eos_id, self.max_seq, self.num_slots
+        base_key = self._base_key
+
+        def admit(params, state, caches, tokens, valid, offsets, true_lens,
+                  seeds, budgets0):
+            C = tokens.shape[1]
+            # a slot's FIRST chunk starts from pristine state: recurrent
+            # mixers accumulate (h/conv/C/n/m carry the previous occupant
+            # forward — the seed engine's whole-prompt *_sequence prefill
+            # implicitly started from zeros), and KV rows revert to their
+            # init values rather than stale garbage (XLA folds the init
+            # tree into constants; no second cache is held)
+            first = valid & (offsets == 0)
+
+            def reset(cur, ini):
+                m = first.reshape((1, ns) + (1,) * (cur.ndim - 2))
+                return jnp.where(m, ini.astype(cur.dtype), cur)
+
+            caches = jax.tree_util.tree_map(
+                reset, caches, M.init_cache(cfg, ns, max_seq))
+            # unembed only each slot's true last prompt row (the one whose
+            # logits can be sampled), not all C chunk positions
+            idx = jnp.clip(true_lens - 1 - offsets, 0, C - 1)
+            logits, _, new_caches = M.forward(
+                params, {"tokens": tokens}, cfg, caches=caches,
+                cache_pos=offsets, gather_pos=idx)
+
+            def merge(old, new):
+                m = valid.reshape((1, ns) + (1,) * (old.ndim - 2))
+                return jnp.where(m, new.astype(old.dtype), old)
+
+            caches = jax.tree_util.tree_map(merge, caches, new_caches)
+            last = logits[:, 0]                                 # (S, V)
+            final = valid & (offsets + C >= true_lens)
+            keys0 = smp.request_keys(base_key, seeds)
+            toks, keys = smp.sample(last, keys0, sc)
+            hit_eos = (final & (toks == eos)) if eos is not None \
+                else jnp.zeros_like(final)
+            act = final & (budgets0 > 0) & ~hit_eos \
+                & (true_lens < max_seq - 1)
+            state = SlotState(
+                last_tok=jnp.where(final, toks, state.last_tok),
+                pos=jnp.where(final, true_lens, state.pos),
+                budget=jnp.where(final, budgets0, state.budget),
+                active=jnp.where(final, act, state.active),
+                rng=jnp.where(final[:, None], keys, state.rng))
+            return state, caches, toks
+
+        return admit
+
+    # ------------------------------------------------------------------
+    # host-side request plumbing
+    # ------------------------------------------------------------------
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               seed: int | None = None) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        if not 1 <= len(prompt) <= self.max_seq - 1:
+            # an oversized prompt would clamp its chunk offsets into
+            # earlier cache rows and "complete" with scrambled state
+            raise ValueError(f"prompt length {len(prompt)} must be in "
+                             f"[1, max_seq-1={self.max_seq - 1}]")
         # uid comes from a monotonic counter: queue length would recycle
         # ids once requests drain, aliasing two live requests
-        req = Request(uid=next(self._next_uid), prompt=np.asarray(prompt,
-                                                                  np.int32),
-                      max_new_tokens=max_new_tokens)
+        uid = next(self._next_uid)
+        req = Request(uid=uid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      seed=uid if seed is None else int(seed),
+                      t_submit=time.perf_counter())
         self._queue.append(req)
         return req
 
-    def _prefill_fn(self, plen: int):
-        if plen not in self._prefills:
-            cfg = self.cfg
-
-            def one(params, tokens, true_len, caches):
-                """Prefill ONE prompt (B=1), then scatter into its slot.
-                Prompts are padded to a length bucket; logits are read at
-                the true last position (padding rows in the cache get
-                overwritten as decode advances)."""
-                # cache leaves are (n_periods, B, ...) — slice the batch dim
-                c1 = jax.tree_util.tree_map(lambda a: a[:, :1], caches)
-                pos0 = jnp.zeros((1,), jnp.int32)
-                logits, _, c1 = M.forward(params, {"tokens": tokens[None]},
-                                          cfg, caches=c1, cache_pos=pos0)
-                return logits[0, true_len - 1], c1
-
-            self._prefills[plen] = jax.jit(one)
-        return self._prefills[plen]
-
     def _admit(self):
-        for slot in range(self.num_slots):
+        ns, C = self.num_slots, self.prefill_chunk
+        admitted: list[tuple[int, Request]] = []
+        for slot in range(ns):
             if self.slot_req[slot] is None and self._queue:
                 req = self._queue.pop(0)
-                plen = _bucket(len(req.prompt), self._bucket_q)
-                padded = np.zeros((plen,), np.int32)
-                padded[:len(req.prompt)] = req.prompt
-                last_logits, c1 = self._prefill_fn(plen)(
-                    self.params, jnp.asarray(padded),
-                    jnp.int32(len(req.prompt)), self.caches)
-                # scatter the B=1 cache rows into this slot (batch is dim 1)
-                self.caches = jax.tree_util.tree_map(
-                    lambda full, one: full.at[:, slot].set(one[:, 0]),
-                    self.caches, c1)
-                tok = int(jnp.argmax(last_logits))
-                req.out_tokens.append(tok)
                 self.slot_req[slot] = req
-                self.positions[slot] = len(req.prompt)
-                self.budgets[slot] = req.max_new_tokens - 1
-                self.last_tok[slot] = tok
+                admitted.append((slot, req))
+        if not admitted:
+            return
+        n_chunks = {s: max(1, -(-len(r.prompt) // C)) for s, r in admitted}
+        finals: dict[int, Any] = {}          # slot -> its final-chunk tokens
+        for ci in range(max(n_chunks.values())):
+            tokens = np.zeros((ns, C), np.int32)
+            valid = np.zeros((ns,), bool)
+            offsets = np.zeros((ns,), np.int32)
+            true_lens = np.ones((ns,), np.int32)
+            seeds = np.zeros((ns,), np.int32)
+            budgets0 = np.zeros((ns,), np.int32)
+            for slot, req in admitted:
+                if ci >= n_chunks[slot]:
+                    continue
+                off = ci * C
+                if ci == n_chunks[slot] - 1:
+                    # a final chunk whose padded end would cross max_seq
+                    # slides back inside the cache (dynamic_update_slice
+                    # would clamp the write start and scramble rows);
+                    # the re-covered rows recompute to identical values
+                    off = min(off, max(0, self.max_seq - C))
+                piece = req.prompt[off:off + C]
+                tokens[slot, :len(piece)] = piece
+                valid[slot] = True
+                offsets[slot] = off
+                true_lens[slot] = len(req.prompt)
+                seeds[slot] = req.seed
+                budgets0[slot] = req.max_new_tokens - 1
+            self.state, self.caches, toks = self._admit_chunk(
+                self.params, self.state, self.caches, jnp.asarray(tokens),
+                jnp.asarray(valid), jnp.asarray(offsets),
+                jnp.asarray(true_lens), jnp.asarray(seeds),
+                jnp.asarray(budgets0))
+            self.n_admit_calls += 1
+            for slot, req in admitted:
+                if ci == n_chunks[slot] - 1:
+                    finals[slot] = toks
+        # one blocking sync for the whole admission round
+        active = np.asarray(self.state.active)
+        now = time.perf_counter()
+        for slot, req in admitted:
+            tok = int(np.asarray(finals[slot])[slot])
+            req.out_tokens.append(tok)
+            req.t_first = now
+            self.n_generated += 1
+            if not active[slot]:
+                req.done = True
+                self.slot_req[slot] = None
+        self.n_syncs += 1
 
     # ------------------------------------------------------------------
-    def step(self):
-        """One engine tick: admit + one decode for all active slots."""
+    def step(self) -> bool:
+        """One engine tick: admit queued prompts, then `decode_steps`
+        fused decode steps for all active slots (a single jit call and a
+        single host sync)."""
         self._admit()
-        active = np.array([r is not None for r in self.slot_req])
-        if not active.any():
+        if not any(r is not None for r in self.slot_req):
             return False
-        toks = jnp.asarray(self.last_tok)[:, None]
-        pos = jnp.asarray(self.positions)
-        logits, self.caches = self._decode(self.params, toks, self.caches,
-                                           pos)
-        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.state, self.caches, toks, emitted = self._tick(
+            self.params, self.state, self.caches)
+        toks = np.asarray(toks)                       # (steps, slots)
+        emitted = np.asarray(emitted)
+        active = np.asarray(self.state.active)
+        self.n_ticks += 1
+        self.n_syncs += 1
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
-            self.positions[slot] += 1
-            if self.budgets[slot] > 0:
-                req.out_tokens.append(int(nxt[slot]))
-                self.last_tok[slot] = nxt[slot]
-                self.budgets[slot] -= 1
-                if (self.eos_id is not None
-                        and nxt[slot] == self.eos_id):
-                    self.budgets[slot] = 0
-            if self.budgets[slot] <= 0 or \
-                    self.positions[slot] >= self.max_seq - 1:
+            for t in range(toks.shape[0]):
+                if emitted[t, slot]:
+                    req.out_tokens.append(int(toks[t, slot]))
+                    self.n_generated += 1
+            if not active[slot]:
                 req.done = True
                 self.slot_req[slot] = None
         return True
@@ -176,8 +371,8 @@ class Engine:
             shd.deactivate()
         self._ctx = None
 
+    def __enter__(self) -> "Engine":
+        return self
 
-def _bucket(n: int, q: int = 16) -> int:
-    if q == 1:
-        return n
-    return max(q, ((n + q - 1) // q) * q)
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()

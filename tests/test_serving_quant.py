@@ -93,15 +93,14 @@ def test_engine_threads_capacity_factor_and_dispatch():
     cfg = get_config("qwen3-moe-30b-a3b", smoke=True)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     qparams = bl.tree_prepare_serving(params, QCFG8)
-    eng = Engine(cfg, qparams, num_slots=2, max_seq=32,
-                 capacity_factor=2.0, dispatch="per_source")
-    assert eng.cfg.moe_capacity_factor == 2.0
-    assert eng.cfg.ep_dispatch == "per_source"
-    assert cfg.moe_capacity_factor == 1.25      # caller's cfg untouched
-    reqs = [eng.submit([1, 2, 3], max_new_tokens=3),
-            eng.submit([4, 5], max_new_tokens=3)]
-    eng.run()
-    eng.close()
+    with Engine(cfg, qparams, num_slots=2, max_seq=32,
+                capacity_factor=2.0, dispatch="per_source") as eng:
+        assert eng.cfg.moe_capacity_factor == 2.0
+        assert eng.cfg.ep_dispatch == "per_source"
+        assert cfg.moe_capacity_factor == 1.25  # caller's cfg untouched
+        reqs = [eng.submit([1, 2, 3], max_new_tokens=3),
+                eng.submit([4, 5], max_new_tokens=3)]
+        eng.run()
     assert all(r.done and len(r.out_tokens) == 3 for r in reqs)
     assert all(0 <= t < cfg.vocab_size for r in reqs for t in r.out_tokens)
     with pytest.raises(ValueError, match="dispatch"):

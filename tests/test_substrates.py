@@ -191,12 +191,13 @@ def test_engine_serves_batched_requests():
 
 def test_engine_serves_hybrid_arch():
     """Continuous batching with mixed recurrent+attention+MoE state (jamba):
-    slot scatter must handle KV caches, mamba (h, conv) and MoE together,
-    and recurrent archs must prefill at exact length (no padding)."""
+    the admission merge must handle KV caches, mamba (h, conv) and MoE
+    together, and recurrent archs must prefill token-by-token (their state
+    cannot skip padding)."""
     cfg = get_config("jamba-1.5-large-398b", smoke=True)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     eng = Engine(cfg, params, num_slots=2, max_seq=48)
-    assert eng._bucket_q == 1        # exact-length prefill for SSM archs
+    assert eng.prefill_chunk == 1    # token-by-token prefill for SSM archs
     rng = np.random.default_rng(1)
     reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=n), 3)
             for n in (5, 9, 6)]
