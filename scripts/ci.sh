@@ -2,7 +2,10 @@
 # Tier-1 CI entry point, staged:
 #
 #   lint        python -m pyflakes src tests benchmarks scripts
-#               (skips cleanly when pyflakes isn't installed)
+#               (reports SKIP — loudly, in the summary — when pyflakes
+#               isn't installed; it used to report PASS, which hid that
+#               lint had never actually run in the offline container.
+#               `pip install .[dev]` provides pyflakes.)
 #   tests       full pytest suite minus `multidevice`, then the marked
 #               multidevice subset in ONE 8-virtual-device pass
 #               (XLA_FLAGS=--xla_force_host_platform_device_count=8 makes
@@ -26,11 +29,16 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 BENCH_JSON="${TMPDIR:-/tmp}/ci_bench_$$.json"
 SMOKE_RAN=0
 
+# stages exit 0 = PASS, 77 = SKIP (tool unavailable — visible in the
+# summary, does not fail the run), anything else = FAIL
+SKIP_RC=77
+
 stage_lint() {
     if python -c "import pyflakes" 2>/dev/null; then
         python -m pyflakes src tests benchmarks scripts
     else
-        echo "pyflakes not installed — lint skipped"
+        echo "pyflakes not installed (pip install .[dev]) — lint skipped"
+        return $SKIP_RC
     fi
 }
 
@@ -75,8 +83,12 @@ FAILED=0
 for stage in "${STAGES[@]}"; do
     fn="stage_${stage//-/_}"
     echo "=== ci stage: $stage ==="
-    if "$fn"; then
+    "$fn"
+    rc=$?
+    if [ "$rc" -eq 0 ]; then
         SUMMARY+=("PASS  $stage")
+    elif [ "$rc" -eq "$SKIP_RC" ]; then
+        SUMMARY+=("SKIP  $stage")
     else
         SUMMARY+=("FAIL  $stage")
         FAILED=1

@@ -3,8 +3,6 @@
     PYTHONPATH=src python scripts/finalize_experiments.py
 """
 import io
-import re
-import subprocess
 import sys
 from contextlib import redirect_stdout
 

@@ -18,9 +18,13 @@ import threading
 import numpy as np
 
 import jax
-import ml_dtypes  # noqa: F401  (registers bfloat16 etc. with numpy)
+import ml_dtypes
 
 SEP = "/"
+
+# importing ml_dtypes registers the extended dtypes with numpy — _decode's
+# np.dtype("bfloat16") lookups depend on it, so verify at import time
+assert np.dtype("bfloat16") == np.dtype(ml_dtypes.bfloat16)
 
 _NATIVE_KINDS = set("biufc")
 

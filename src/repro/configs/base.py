@@ -13,8 +13,6 @@ parameters, which keeps the lowered HLO compact for 40–72-layer models.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
-
 import jax.numpy as jnp
 
 from repro.core.bramac_linear import QuantConfig
@@ -78,6 +76,12 @@ class ModelConfig:
     norm_eps: float = 1e-5
     quant: QuantConfig = QuantConfig(enabled=False)
     quant_kv: bool = False           # int8 KV cache (GQA decode; §Perf)
+    page_size: int = 16              # KV-cache page rows ("BRAM-array-sized"
+    #                                  blocks): the paged serving layout
+    #                                  allocates the cache as a shared pool
+    #                                  of fixed (page_size,)-row pages with
+    #                                  per-slot block tables instead of a
+    #                                  dense [slot, max_seq] reservation
     remat: bool = True
     scan_layers: bool = True         # False: unroll periods (exact HLO cost
     #                                  accounting — scan bodies are counted
@@ -91,6 +95,9 @@ class ModelConfig:
                 f"pattern period {len(self.layer_pattern)}")
         if self.num_heads % max(self.num_kv_heads, 1):
             raise ValueError(f"{self.name}: heads/kv_heads mismatch")
+        if self.page_size < 1:
+            raise ValueError(f"{self.name}: page_size must be >= 1, "
+                             f"got {self.page_size}")
 
     @property
     def hd(self) -> int:

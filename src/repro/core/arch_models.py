@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.efsm import BRAMAC_1DA, BRAMAC_2SA, Variant
+from repro.core.efsm import Variant
 
 # ---------------------------------------------------------------------------
 # Baseline FPGA: Arria-10 GX900, fastest speed grade (Table I)

@@ -25,7 +25,6 @@ import dataclasses
 import math
 
 from repro.core.quant import SUPPORTED_BITS
-from repro.core.mac2 import lane_width
 
 ROW_BITS = 160          # dummy array columns == main BRAM physical columns
 PORT_BITS = 40          # per-port data width (max-width simple dual port)

@@ -38,8 +38,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.arch_models import CCB, COMEFA_A, COMEFA_D, BitSerialBram
-from repro.core.efsm import BRAMAC_1DA, BRAMAC_2SA, PORT_BITS, Variant
+from repro.core.arch_models import CCB, COMEFA_D, BitSerialBram
+from repro.core.efsm import BRAMAC_1DA, PORT_BITS, Variant
 
 T_RED_COEF = (6, 8)     # T_red(p) = 6p + 8 (calibrated, see module docstring)
 

@@ -5,7 +5,8 @@
         [--shard 4 | --shard data=2,model=4] \
         [--capacity-factor 1.0] [--dispatch per_source] \
         [--sampling top_p --temperature 0.8 --top-p 0.95] \
-        [--decode-steps 8] [--prefill-chunk 16]
+        [--decode-steps 8] [--prefill-chunk 16] \
+        [--kv-layout paged|dense] [--page-size 16] [--num-pages 12]
 """
 from __future__ import annotations
 
@@ -60,9 +61,22 @@ def main():
                          "(recurrent archs always use 1)")
     ap.add_argument("--seed", type=int, default=0,
                     help="engine base seed for request sampling streams")
+    ap.add_argument("--kv-layout", default="paged",
+                    choices=("paged", "dense"),
+                    help="KV-cache layout: 'paged' shares a pool of fixed-"
+                         "size pages through per-slot block tables, 'dense' "
+                         "reserves max_seq rows per slot (%(default)s)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="rows per KV page for --kv-layout paged "
+                         "(0 = config default, cfg.page_size)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="total pages in the shared pool (0 = capacity-"
+                         "equal to dense: slots * ceil(max_seq/page_size))")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.page_size:
+        cfg = cfg.replace(page_size=args.page_size)
     if args.quant_bits:
         cfg = cfg.replace(quant=QuantConfig(enabled=True,
                                             bits_w=args.quant_bits,
@@ -82,7 +96,9 @@ def main():
                 dispatch=args.dispatch or None, sampling=args.sampling,
                 temperature=args.temperature, top_k=args.top_k,
                 top_p=args.top_p, decode_steps=args.decode_steps,
-                prefill_chunk=args.prefill_chunk, seed=args.seed) as eng:
+                prefill_chunk=args.prefill_chunk, seed=args.seed,
+                kv_layout=args.kv_layout,
+                num_pages=args.num_pages or None) as eng:
         reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
                                         size=int(rng.integers(4, 24))),
                            args.new_tokens)
@@ -101,6 +117,17 @@ def main():
               f"({eng.n_syncs / max(eng.n_generated, 1):.2f} syncs/tok at "
               f"decode_steps={args.decode_steps}); mean ttft "
               f"{1e3 * float(np.mean(ttft)) if ttft else 0.0:.0f}ms")
+        if eng.kv_layout == "paged":
+            dense_rows = eng.num_slots * eng.max_seq
+            hw_rows = eng.pages_high_water * eng.page_size
+            print(f"  kv pool: {eng.pages_high_water}/{eng.num_pages} pages "
+                  f"high-water x {eng.page_size} rows = {hw_rows} rows "
+                  f"({100 * hw_rows / dense_rows:.0f}% of the dense "
+                  f"{dense_rows}-row reservation); "
+                  f"{eng.pages_in_use} pages still in use")
+        else:
+            print(f"  kv dense: {eng.num_slots} slots x {eng.max_seq} rows "
+                  f"reserved up front ({eng.num_slots * eng.max_seq} rows)")
 
 
 if __name__ == "__main__":

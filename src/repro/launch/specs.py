@@ -15,7 +15,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import archs, get_config
 from repro.models import model as M
 from repro.optim import adamw
-from repro.parallel import sharding as shd
 
 
 def batch_specs(cfg, shape_name: str) -> dict:

@@ -7,11 +7,24 @@ All support three modes driven by the call:
   * decode: single-token query against a KV cache updated in place.
 
 Caches are plain dicts of arrays so they shard/checkpoint like params.
+
+KV layouts (the paper's small-fixed-array memory discipline applied to
+serving):
+  * dense — per-sequence (B, max_seq, …) reservations, updated with
+    dynamic_update_slice at cache_pos.
+  * paged — one shared pool of (page_size,)-row pages per layer plus
+    per-sequence int32 block tables (a `PagedKV` bundle threaded through
+    the forward call).  Writes scatter rows through the table (masked
+    rows drop out of bounds), reads gather the table back into a
+    (B, max_seq, …) view whose masked rows make exactly-zero softmax
+    contributions — so the arithmetic is bit-identical to the dense
+    layout while pool capacity is bounded by live tokens, not
+    num_slots × max_seq.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -19,6 +32,60 @@ import jax.numpy as jnp
 from repro.models.layers import apply_rope, dense, init_dense, init_rmsnorm, rmsnorm
 
 Q_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# paged KV layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PagedKV:
+    """Block-table view of a shared page pool, built *inside* traced code
+    (plain dataclass, not a pytree: `max_seq`/`page_size` stay static).
+
+    tables     (B, max_pages) i32 — page id of each sequence's page j;
+               unallocated entries may hold any in-range id (their rows are
+               only ever read masked).
+    n_pages    (B,) i32 — pages actually allocated per sequence; writes to
+               positions at or past `n_pages * page_size` are dropped.
+    write_mask (B,) bool — sequences allowed to write this call (admitting
+               slots during prefill, active slots during decode); a masked
+               sequence's rows never reach the pool, so co-resident
+               sequences sharing it stay untouched.
+    """
+    tables: jax.Array
+    n_pages: jax.Array
+    write_mask: jax.Array
+    max_seq: int
+    page_size: int
+
+
+def paged_update(pool, new, positions, pv: PagedKV):
+    """Scatter `new` (B, S, …) rows at absolute `positions` (B, S) through
+    the block table into `pool` ((P, page_size, …)).  Masked / out-of-range
+    rows are routed to page id P and dropped."""
+    P, ps = pool.shape[0], pv.page_size
+    pg_idx = positions // ps
+    ok = pv.write_mask[:, None] & (pg_idx < pv.n_pages[:, None]) \
+        & (positions < pv.max_seq)
+    pg = jnp.take_along_axis(
+        pv.tables, jnp.clip(pg_idx, 0, pv.tables.shape[1] - 1), axis=1)
+    pg = jnp.where(ok, pg, P)                       # OOB page id -> dropped
+    return pool.at[pg, positions % ps].set(new.astype(pool.dtype),
+                                           mode="drop")
+
+
+def paged_view(pool, pv: PagedKV):
+    """Gather each sequence's pages into a dense (B, max_seq, …) view.
+
+    Unallocated table entries gather garbage rows, but every such row sits
+    at a position the causal mask excludes, where `_attend` replaces its
+    score with exactly -1e30 — identical to the dense layout's untouched
+    rows, so downstream softmax arithmetic is bit-identical."""
+    view = pool[jnp.clip(pv.tables, 0, pool.shape[0] - 1)]
+    B = pv.tables.shape[0]
+    view = view.reshape((B, -1) + pool.shape[2:])
+    return view[:, :pv.max_seq]
 
 
 # ---------------------------------------------------------------------------
@@ -99,8 +166,9 @@ def init_gqa(key, cfg):
             "wo": init_dense(ks[3], H * hd, d, dt)}
 
 
-def gqa(p, x, cfg, positions, cache=None, cache_pos=None):
-    """cache: {"k","v"} (B, S_max, Hkv, hd) or None (train/prefill).
+def gqa(p, x, cfg, positions, cache=None, cache_pos=None, paged=None):
+    """cache: {"k","v"} (B, S_max, Hkv, hd), or (P, page_size, Hkv, hd)
+    pools when a `PagedKV` bundle is passed, or None (train/prefill).
 
     Returns (out, new_cache)."""
     B, S, _ = x.shape
@@ -116,8 +184,16 @@ def gqa(p, x, cfg, positions, cache=None, cache_pos=None):
     elif "ks" in cache:                          # int8 KV cache (quant_kv)
         # decode and prefill chunks both attend the stored int8 rows
         # (earlier chunks only exist quantized) via the same masked path
-        new_cache = _update_cache_q(cache, k, v, cache_pos)
-        out = decode_attention_q(q, new_cache, positions)
+        new_cache = _update_cache_q(cache, k, v, cache_pos, paged, positions)
+        view = new_cache if paged is None else \
+            {key: paged_view(new_cache[key], paged) for key in new_cache}
+        out = decode_attention_q(q, view, positions)
+    elif paged is not None:
+        kc = paged_update(cache["k"], k, positions, paged)
+        vc = paged_update(cache["v"], v, positions, paged)
+        out = chunk_attention(q, paged_view(kc, paged),
+                              paged_view(vc, paged), positions)
+        new_cache = {"k": kc, "v": vc}
     else:
         kc = _update_cache(cache["k"], k, cache_pos)
         vc = _update_cache(cache["v"], v, cache_pos)
@@ -140,13 +216,20 @@ def _update_cache(cache, new, pos):
     return jax.vmap(upd)(cache, new, pos)
 
 
-def init_gqa_cache(cfg, batch, max_seq, dtype):
+def init_gqa_cache(cfg, batch, max_seq, dtype, num_pages=None):
+    """num_pages=None: dense (batch, max_seq, …) reservations; otherwise a
+    shared paged pool of (num_pages, page_size, …) — no batch axis, the
+    engine's block tables carry the sequence↔page mapping."""
     hd = cfg.hd
-    shape = (batch, max_seq, cfg.num_kv_heads, hd)
+    if num_pages is None:
+        shape = (batch, max_seq, cfg.num_kv_heads, hd)
+        sshape = (batch, max_seq, cfg.num_kv_heads)
+    else:
+        shape = (num_pages, cfg.page_size, cfg.num_kv_heads, hd)
+        sshape = (num_pages, cfg.page_size, cfg.num_kv_heads)
     if getattr(cfg, "quant_kv", False):
         # int8 KV cache (beyond-paper: the paper's integer-MAC dataflow
         # applied to the cache, which dominates decode HBM bytes)
-        sshape = (batch, max_seq, cfg.num_kv_heads)
         return {"k": jnp.zeros(shape, jnp.int8),
                 "ks": jnp.ones(sshape, jnp.float32),
                 "v": jnp.zeros(shape, jnp.int8),
@@ -166,9 +249,14 @@ def _quant_rows(x):
     return jnp.clip(q, -127, 127).astype(jnp.int8), scale
 
 
-def _update_cache_q(cache, k, v, pos):
+def _update_cache_q(cache, k, v, pos, paged=None, positions=None):
     kq, ks = _quant_rows(k)
     vq, vs = _quant_rows(v)
+    if paged is not None:
+        return {"k": paged_update(cache["k"], kq, positions, paged),
+                "ks": paged_update(cache["ks"], ks, positions, paged),
+                "v": paged_update(cache["v"], vq, positions, paged),
+                "vs": paged_update(cache["vs"], vs, positions, paged)}
     return {"k": _update_cache(cache["k"], kq, pos),
             "ks": _update_cache(cache["ks"], ks, pos),
             "v": _update_cache(cache["v"], vq, pos),
@@ -233,7 +321,7 @@ def init_mla(key, cfg):
     }
 
 
-def mla(p, x, cfg, positions, cache=None, cache_pos=None):
+def mla(p, x, cfg, positions, cache=None, cache_pos=None, paged=None):
     """Latent attention; the cache stores only (c_kv, k_rope) — the paper's
     BRAMAC quantization applies to every projection here as well."""
     B, S, _ = x.shape
@@ -249,7 +337,17 @@ def mla(p, x, cfg, positions, cache=None, cache_pos=None):
     k_rope = apply_rope(dense(x, p["w_kr"], cfg.quant)[:, :, None, :],
                         positions, cfg.rope_theta)[:, :, 0]   # (B,S,rope)
 
-    if cache is not None:
+    if cache is not None and paged is not None:
+        new_cache = {"c_kv": paged_update(cache["c_kv"], c_kv,
+                                          positions, paged),
+                     "k_rope": paged_update(cache["k_rope"], k_rope,
+                                            positions, paged)}
+        # up-projections run over the gathered view, exactly as the dense
+        # path runs them over the full (B, max_seq, …) cache
+        c_kv = paged_view(new_cache["c_kv"], paged)
+        k_rope = paged_view(new_cache["k_rope"], paged)
+        Sk = c_kv.shape[1]
+    elif cache is not None:
         c_kv = _update_cache(cache["c_kv"], c_kv, cache_pos)
         k_rope = _update_cache(cache["k_rope"], k_rope, cache_pos)
         new_cache = {"c_kv": c_kv, "k_rope": k_rope}
@@ -272,9 +370,11 @@ def mla(p, x, cfg, positions, cache=None, cache_pos=None):
     return dense(out.reshape(B, S, H * vd), p["wo"], cfg.quant), new_cache
 
 
-def init_mla_cache(cfg, batch, max_seq, dtype):
-    return {"c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
-            "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype)}
+def init_mla_cache(cfg, batch, max_seq, dtype, num_pages=None):
+    lead = (batch, max_seq) if num_pages is None \
+        else (num_pages, cfg.page_size)
+    return {"c_kv": jnp.zeros(lead + (cfg.kv_lora_rank,), dtype),
+            "k_rope": jnp.zeros(lead + (cfg.qk_rope_dim,), dtype)}
 
 
 # ---------------------------------------------------------------------------

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense, he_init, init_dense
+from repro.models.layers import dense, init_dense
 
 
 def _dt_rank(cfg):

@@ -40,14 +40,17 @@ def _inputs_to_hidden(params, batch, cfg):
 
 
 def forward(params, batch, cfg: ModelConfig, caches=None, cache_pos=None,
-            last_only: bool = False, gather_pos=None):
+            last_only: bool = False, gather_pos=None, paged=None):
     """Returns (logits, aux_loss, new_caches).
 
     last_only: unembed only the final position — prefill at 32k would
     otherwise materialize a (B, 32768, vocab) logits tensor.
     gather_pos: (B,) per-sequence position to unembed instead (chunked
     prefill: each slot's true last prompt token sits at a different row);
-    returns (B, 1, vocab) logits like last_only."""
+    returns (B, 1, vocab) logits like last_only.
+    paged: an attention.PagedKV bundle — caches hold shared page pools
+    instead of dense per-sequence reservations, and attention
+    gathers/scatters KV rows through its block tables."""
     x = _inputs_to_hidden(params, batch, cfg)
     B, S = x.shape[:2]
     if cache_pos is not None:
@@ -62,7 +65,7 @@ def forward(params, batch, cfg: ModelConfig, caches=None, cache_pos=None,
         ve = ve.astype(cfg.compute_dtype)
     x, aux, new_caches = tf.stack_apply(
         params["layers"], x, cfg, positions=positions, vision_embeds=ve,
-        caches=caches, cache_pos=cache_pos)
+        caches=caches, cache_pos=cache_pos, paged=paged)
     if last_only:
         x = x[:, -1:]
     elif gather_pos is not None:
@@ -82,8 +85,19 @@ def loss_fn(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
 # Serving
 # ---------------------------------------------------------------------------
 
-def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
-    return tf.init_stack_cache(cfg, batch, max_seq, cfg.compute_dtype)
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, num_pages=None):
+    """num_pages=None: dense [batch, max_seq] KV reservations.  Otherwise
+    attention KV lives in a shared pool of `num_pages` pages of
+    `cfg.page_size` rows each (block tables are engine state, passed to
+    forward/decode_step as an attention.PagedKV bundle)."""
+    return tf.init_stack_cache(cfg, batch, max_seq, cfg.compute_dtype,
+                               num_pages)
+
+
+def cache_pool_flags(cfg: ModelConfig):
+    """Pytree matching init_cache(num_pages=...) with True at shared-pool
+    leaves, False at per-slot leaves (recurrent state, xattn KV)."""
+    return tf.stack_cache_pool_flags(cfg)
 
 
 def prefill(params, batch, cfg: ModelConfig, caches):
@@ -97,12 +111,13 @@ def prefill(params, batch, cfg: ModelConfig, caches):
     return logits[:, -1], new_caches
 
 
-def decode_step(params, tokens, cfg: ModelConfig, caches, pos):
+def decode_step(params, tokens, cfg: ModelConfig, caches, pos, paged=None):
     """tokens: (B,1) i32; pos: (B,) current position (index being written).
 
     Returns (logits (B,V), new_caches)."""
     batch = {"tokens": tokens}
-    logits, _, new_caches = forward(params, batch, cfg, caches, cache_pos=pos)
+    logits, _, new_caches = forward(params, batch, cfg, caches, cache_pos=pos,
+                                    paged=paged)
     return logits[:, 0], new_caches
 
 

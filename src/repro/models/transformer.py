@@ -8,7 +8,6 @@ the scan (overlappable by the XLA latency-hiding scheduler).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
@@ -60,13 +59,18 @@ def init_block(key, cfg, spec: str):
     return p
 
 
-def init_block_cache(cfg, spec: str, batch: int, max_seq: int, dtype):
-    """Decode-time state for one block (None for stateless)."""
+def init_block_cache(cfg, spec: str, batch: int, max_seq: int, dtype,
+                     num_pages=None):
+    """Decode-time state for one block (None for stateless).
+
+    num_pages switches attention KV to the paged pool layout; recurrent
+    state and the cross-attention cache are per-slot fixed-size arrays
+    either way (they are the "registers" of a slot, not token storage)."""
     mixer, _ = parse_spec(spec)
     if mixer == "attn":
-        return attn.init_gqa_cache(cfg, batch, max_seq, dtype)
+        return attn.init_gqa_cache(cfg, batch, max_seq, dtype, num_pages)
     if mixer == "mla":
-        return attn.init_mla_cache(cfg, batch, max_seq, dtype)
+        return attn.init_mla_cache(cfg, batch, max_seq, dtype, num_pages)
     if mixer == "xattn":
         return attn.init_xattn_cache(cfg, batch, dtype)
     if mixer == "mamba":
@@ -83,15 +87,17 @@ def init_block_cache(cfg, spec: str, batch: int, max_seq: int, dtype):
 # ---------------------------------------------------------------------------
 
 def block_apply(p, x, cfg, spec, *, positions, vision_embeds=None,
-                cache=None, cache_pos=None):
+                cache=None, cache_pos=None, paged=None):
     """Returns (x, aux_loss, new_cache)."""
     mixer, ff = parse_spec(spec)
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     decode = cache is not None and x.shape[1] == 1
     if mixer == "attn":
-        y, new_cache = attn.gqa(p["mixer"], h, cfg, positions, cache, cache_pos)
+        y, new_cache = attn.gqa(p["mixer"], h, cfg, positions, cache,
+                                cache_pos, paged)
     elif mixer == "mla":
-        y, new_cache = attn.mla(p["mixer"], h, cfg, positions, cache, cache_pos)
+        y, new_cache = attn.mla(p["mixer"], h, cfg, positions, cache,
+                                cache_pos, paged)
     elif mixer == "xattn":
         y, new_cache = attn.xattn(p["mixer"], h, cfg, vision_embeds,
                                   cache, cache_pos)
@@ -135,18 +141,34 @@ def init_stack(key, cfg):
     return params
 
 
-def init_stack_cache(cfg, batch, max_seq, dtype):
+def init_stack_cache(cfg, batch, max_seq, dtype, num_pages=None):
     caches = {}
     for i, spec in enumerate(cfg.layer_pattern):
-        one = init_block_cache(cfg, spec, batch, max_seq, dtype)
+        one = init_block_cache(cfg, spec, batch, max_seq, dtype, num_pages)
         caches[f"pos{i}"] = jax.tree_util.tree_map(
             lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape).copy(),
             one)
     return caches
 
 
+def stack_cache_pool_flags(cfg):
+    """A pytree matching init_stack_cache's paged structure with True at
+    shared page-pool leaves and False at per-slot leaves — engines use it
+    to reset/merge only slot-private state (pools are co-owned and must
+    never be blanket-reset or slot-masked)."""
+    flags = {}
+    for i, spec in enumerate(cfg.layer_pattern):
+        mixer, _ = parse_spec(spec)
+        is_pool = mixer in ("attn", "mla")
+        shapes = jax.eval_shape(
+            lambda s=spec: init_block_cache(cfg, s, 1, cfg.page_size,
+                                            cfg.compute_dtype, num_pages=1))
+        flags[f"pos{i}"] = jax.tree_util.tree_map(lambda _: is_pool, shapes)
+    return flags
+
+
 def stack_apply(params, x, cfg, *, positions, vision_embeds=None,
-                caches=None, cache_pos=None):
+                caches=None, cache_pos=None, paged=None):
     """Scan over periods. Returns (x, aux_total, new_caches)."""
 
     def period(x, layer_in):
@@ -158,7 +180,7 @@ def stack_apply(params, x, cfg, *, positions, vision_embeds=None,
             x, aux, nc = block_apply(
                 p_slice[f"pos{i}"], x, cfg, spec, positions=positions,
                 vision_embeds=vision_embeds, cache=cache_i,
-                cache_pos=cache_pos)
+                cache_pos=cache_pos, paged=paged)
             aux_total += aux
             if nc is not None:
                 new_caches[f"pos{i}"] = nc

@@ -11,7 +11,6 @@ the slow pod-to-pod links.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

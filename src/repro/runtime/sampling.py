@@ -65,8 +65,14 @@ def sample(logits, keys, sc: SamplingConfig):
     l = logits.astype(jnp.float32) / sc.temperature
     if sc.method == "top_k":
         k = min(sc.top_k, l.shape[-1])
-        kth = jax.lax.top_k(l, k)[0][:, -1]             # k-th largest per row
-        l = jnp.where(l >= kth[:, None], l, -jnp.inf)
+        # rank-based mask: a value threshold (`l >= kth`) would keep EVERY
+        # logit tied with the k-th largest, growing the nucleus past k.
+        # lax.top_k breaks ties by lowest index, so scattering its indices
+        # keeps exactly k tokens
+        idx = jax.lax.top_k(l, k)[1]                    # (B, k)
+        keep = jax.vmap(lambda m, i: m.at[i].set(True))(
+            jnp.zeros(l.shape, bool), idx)
+        l = jnp.where(keep, l, -jnp.inf)
     elif sc.method == "top_p":
         srt = jnp.sort(l, axis=-1)[:, ::-1]             # descending
         probs = jax.nn.softmax(srt, axis=-1)

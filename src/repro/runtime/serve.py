@@ -4,9 +4,10 @@ stream).
 
 The engine owns a fixed pool of `num_slots` sequences sharing one KV
 cache, plus a `SlotState` pytree (last token, position, budget, active
-mask, per-slot PRNG key) that lives on device for the engine's lifetime.
-The serving loop is compiled data-flow, not Python control-flow — two
-jit'd functions do all the work:
+mask, per-slot PRNG key, and — in the paged layout — the block tables and
+the free-page list) that lives on device for the engine's lifetime.  The
+serving loop is compiled data-flow, not Python control-flow — two jit'd
+functions do all the work:
 
   admit  — chunked prefill: every queued prompt is cut into fixed-size
            chunks (`prefill_chunk`; 1 for recurrent mixers, which cannot
@@ -24,8 +25,30 @@ jit'd functions do all the work:
            once per tick — i.e. once per `decode_steps` tokens — and gets
            back the (steps, slots) token block plus emission masks.
 
+KV layouts (`kv_layout=`):
+
+  "paged" (default) — the BRAMAC memory discipline applied to the cache:
+           attention KV lives in a shared pool of fixed `cfg.page_size`-row
+           pages ("BRAM-array-sized" blocks) addressed through per-slot
+           int32 block tables.  Pages are granted at admission (lowest
+           free page id first — deterministic), writes scatter through the
+           table inside the jit'd forward, and a request's pages return to
+           the device-resident free list the moment it terminates inside
+           the fused tick (or at admission, for first-token EOS).  When
+           the pool runs dry the admitter exerts backpressure: queued
+           requests wait, FIFO, until a terminating request reclaims
+           enough pages.  Co-resident requests are therefore bounded by
+           total live tokens — not `num_slots × max_seq` — while greedy
+           token streams stay bit-identical to the dense layout (masked
+           pool rows contribute exact zeros to the softmax, like the dense
+           cache's untouched rows).
+
+  "dense" — the PR-4 layout: every slot reserves `max_seq` KV rows up
+           front; kept as the parity oracle and for kernels that want the
+           contiguous reservation.
+
 The Python `Engine` is a thin wrapper holding the request queue and the
-host mirror of slot occupancy; it is also a context manager so the
+host mirror of slot/page occupancy; it is also a context manager so the
 process-global sharding ctx activated by `mesh=` is released even when
 serving raises.
 """
@@ -40,18 +63,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import attention as attn
 from repro.models import model as M
 from repro.parallel import sharding as shd
 from repro.runtime import sampling as smp
 
 
 class SlotState(NamedTuple):
-    """Per-slot decode state; one device-resident pytree for all slots."""
+    """Per-slot decode state; one device-resident pytree for all slots.
+
+    `tables` / `n_pages` / `free` are the paged-KV bookkeeping (empty
+    arrays under the dense layout): `tables[s, j]` is the pool page
+    holding slot s's rows [j*page_size, (j+1)*page_size), `n_pages[s]`
+    how many table entries are live, and `free` the shared free-page
+    mask that allocation (admit) and reclaim (tick) edit on device."""
     last_tok: jax.Array     # (S,) i32  last sampled token (next decode input)
     pos: jax.Array          # (S,) i32  next cache index to write
     budget: jax.Array       # (S,) i32  tokens still to emit after this one
     active: jax.Array       # (S,) bool slot is mid-generation
     rng: jax.Array          # (S, 2) u32 per-request sampling key chain
+    tables: jax.Array       # (S, max_pages) i32 block tables (paged)
+    n_pages: jax.Array      # (S,) i32  pages allocated per slot (paged)
+    free: jax.Array         # (P,) bool free-page mask (paged)
 
 
 @dataclasses.dataclass
@@ -64,6 +97,35 @@ class Request:
     done: bool = False
     t_submit: float = 0.0
     t_first: float = 0.0          # wall time the first token landed (TTFT)
+
+
+def _alloc_pages(free, tables, n_pages, new_pages):
+    """Grant `new_pages[s]` pages to each admitting slot s from the shared
+    free mask, lowest free page id first (stable argsort — deterministic
+    placement).  Admitting slots start empty (their previous occupant's
+    pages were reclaimed), so grants overwrite table entries from 0."""
+    P = free.shape[0]
+    mp = tables.shape[1]
+    order = jnp.argsort(~free, stable=True)          # free page ids first
+    starts = jnp.cumsum(new_pages) - new_pages       # (S,) offsets in order
+    j = jnp.arange(mp, dtype=jnp.int32)[None, :]
+    take = j < new_pages[:, None]                    # (S, mp) granted entries
+    grant = order[jnp.clip(starts[:, None] + j, 0, P - 1)].astype(jnp.int32)
+    tables = jnp.where(take, grant, tables)
+    free = free.at[jnp.where(take, grant, P)].set(False, mode="drop")
+    n_pages = jnp.where(new_pages > 0, new_pages, n_pages)
+    return free, tables, n_pages
+
+
+def _reclaim_pages(free, tables, n_pages, dead):
+    """Return every page owned by a `dead` slot to the free mask.  Stale
+    table entries are left in place — they are only ever read through the
+    causal mask (exact-zero contributions) until the slot is re-granted."""
+    P = free.shape[0]
+    j = jnp.arange(tables.shape[1], dtype=jnp.int32)[None, :]
+    owned = dead[:, None] & (j < n_pages[:, None])
+    free = free.at[jnp.where(owned, tables, P)].set(True, mode="drop")
+    return free, jnp.where(dead, 0, n_pages)
 
 
 class Engine:
@@ -86,6 +148,10 @@ class Engine:
       seed          — engine base seed; a request's stream is keyed by
                       fold_in(base, request.seed) only, so it reproduces
                       across slots and co-batched traffic
+      kv_layout     — "paged" (default) or "dense" (see module docstring)
+      num_pages     — paged pool size; default num_slots * ceil(max_seq /
+                      cfg.page_size) (capacity-equal to dense — shrink it
+                      to trade co-residency for memory)
     """
 
     def __init__(self, cfg, params, num_slots: int, max_seq: int,
@@ -95,7 +161,8 @@ class Engine:
                  sampling: str | smp.SamplingConfig = "greedy",
                  temperature: float = 1.0, top_k: int = 0, top_p: float = 1.0,
                  decode_steps: int = 1, prefill_chunk: int = 16,
-                 seed: int = 0):
+                 seed: int = 0, kv_layout: str = "paged",
+                 num_pages: int | None = None):
         # mesh may be a jax Mesh or a composed-mesh spec ("model=4",
         # "data=2,model=4", "2x4", 4, ...) resolved by sharding.build_mesh.
         # capacity_factor / dispatch override the MoE routing knobs on cfg
@@ -115,6 +182,9 @@ class Engine:
                                           top_k=top_k, top_p=top_p)
         if decode_steps < 1:
             raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
+        if kv_layout not in ("paged", "dense"):
+            raise ValueError(f"kv_layout must be 'paged' or 'dense', "
+                             f"got {kv_layout!r}")
         if mesh is not None and not isinstance(mesh, jax.sharding.Mesh):
             mesh = shd.build_mesh(mesh)
         self.mesh = mesh
@@ -138,15 +208,42 @@ class Engine:
             else max(1, min(prefill_chunk, max_seq - 1))
         self._next_uid = itertools.count()
         self._base_key = jax.random.PRNGKey(seed)
-        self.caches = M.init_cache(cfg, num_slots, max_seq)
+        # --- KV layout ---
+        self.kv_layout = kv_layout
+        self.page_size = cfg.page_size
+        self.pages_per_slot = -(-max_seq // self.page_size)  # table length
+        if kv_layout == "paged":
+            self.num_pages = int(num_pages) if num_pages is not None \
+                else num_slots * self.pages_per_slot
+            if self.num_pages < 1:
+                raise ValueError(f"num_pages must be >= 1, "
+                                 f"got {self.num_pages}")
+            self.caches = M.init_cache(cfg, num_slots, max_seq,
+                                       num_pages=self.num_pages)
+            self._pool_flags = M.cache_pool_flags(cfg)
+            mp, P = self.pages_per_slot, self.num_pages
+        else:
+            self.num_pages = 0
+            self.caches = M.init_cache(cfg, num_slots, max_seq)
+            self._pool_flags = None
+            mp, P = 0, 0
         self.state = SlotState(
             last_tok=jnp.zeros((num_slots,), jnp.int32),
             pos=jnp.zeros((num_slots,), jnp.int32),
             budget=jnp.zeros((num_slots,), jnp.int32),
             active=jnp.zeros((num_slots,), bool),
-            rng=jnp.zeros((num_slots, 2), jnp.uint32))
+            rng=jnp.zeros((num_slots, 2), jnp.uint32),
+            tables=jnp.zeros((num_slots, mp), jnp.int32),
+            n_pages=jnp.zeros((num_slots,), jnp.int32),
+            free=jnp.ones((P,), bool))
         self.slot_req: list[Request | None] = [None] * num_slots
         self._queue: list[Request] = []
+        # host mirror of pool occupancy: updated at admit (grant) and at
+        # the post-sync done scan (reclaim), so backpressure decisions
+        # never need an extra device sync
+        self.pages_in_use = 0
+        self.pages_high_water = 0
+        self._slot_pages = [0] * num_slots
         # host<->device sync accounting for the serving bench: one sync per
         # jit'd tick / per admission round, regardless of decode_steps
         self.n_ticks = 0
@@ -164,16 +261,35 @@ class Engine:
     # compiled data-flow
     # ------------------------------------------------------------------
 
+    def _paged_kv(self, state):
+        """The PagedKV bundle for one traced call; write_mask is supplied
+        by the caller (valid slots at admit, active slots in the tick)."""
+        def bundle(write_mask):
+            return attn.PagedKV(tables=state.tables, n_pages=state.n_pages,
+                                write_mask=write_mask, max_seq=self.max_seq,
+                                page_size=self.page_size)
+        return bundle
+
     def _make_tick(self):
-        """N fused decode steps: decode -> sample -> terminate, scanned."""
+        """N fused decode steps: decode -> sample -> terminate, scanned;
+        under the paged layout, pages of every slot that terminates inside
+        the tick return to the free list before the host ever syncs."""
         cfg, sc = self.cfg, self.sampling
         eos, max_seq, steps = self.eos_id, self.max_seq, self.decode_steps
+        paged_mode = self.kv_layout == "paged"
 
         def tick(params, state, caches):
             def body(carry, _):
                 state, caches = carry
+                # inactive slots must not write: their stale block-table
+                # entries may point at pages since re-granted to another
+                # request (dense slots own their rows, so masking there is
+                # unnecessary — and the PR-4 path stays untouched)
+                pv = self._paged_kv(state)(state.active) if paged_mode \
+                    else None
                 logits, caches = M.decode_step(
-                    params, state.last_tok[:, None], cfg, caches, state.pos)
+                    params, state.last_tok[:, None], cfg, caches, state.pos,
+                    paged=pv)
                 toks, keys = smp.sample(logits, state.rng, sc)
                 emit = state.active
                 tok = jnp.where(emit, toks, state.last_tok)
@@ -183,11 +299,18 @@ class Engine:
                 hit_eos = (emit & (tok == eos)) if eos is not None \
                     else jnp.zeros_like(emit)
                 active = emit & (budget > 0) & ~hit_eos & (pos < max_seq - 1)
-                new = SlotState(tok, pos, budget, active, rng)
+                new = state._replace(last_tok=tok, pos=pos, budget=budget,
+                                     active=active, rng=rng)
                 return (new, caches), (tok, emit)
 
+            pre_active = state.active
             (state, caches), (toks, emitted) = jax.lax.scan(
                 body, (state, caches), None, length=steps)
+            if paged_mode:
+                dead = pre_active & ~state.active
+                free, n_pages = _reclaim_pages(state.free, state.tables,
+                                               state.n_pages, dead)
+                state = state._replace(free=free, n_pages=n_pages)
             return state, caches, toks, emitted
 
         return tick
@@ -199,40 +322,67 @@ class Engine:
         slots mid-decode are masked out of the cache merge); offsets are
         the per-slot chunk starts.  Rows whose chunk completes the prompt
         (`final`) sample their first token on device and commit the slot
-        state; the sampled tokens come back so the host can append them."""
+        state; the sampled tokens come back so the host can append them.
+        Under the paged layout the first chunk also carries each admitting
+        slot's page grant (`new_pages`), allocated on device from the free
+        mask before the forward runs."""
         cfg, sc = self.cfg, self.sampling
         eos, max_seq, ns = self.eos_id, self.max_seq, self.num_slots
         base_key = self._base_key
+        paged_mode = self.kv_layout == "paged"
+        pool_flags = self._pool_flags
 
         def admit(params, state, caches, tokens, valid, offsets, true_lens,
-                  seeds, budgets0):
+                  seeds, budgets0, new_pages):
             C = tokens.shape[1]
+            if paged_mode:
+                free, tables, n_pages = _alloc_pages(
+                    state.free, state.tables, state.n_pages, new_pages)
+                state = state._replace(free=free, tables=tables,
+                                       n_pages=n_pages)
             # a slot's FIRST chunk starts from pristine state: recurrent
             # mixers accumulate (h/conv/C/n/m carry the previous occupant
             # forward — the seed engine's whole-prompt *_sequence prefill
             # implicitly started from zeros), and KV rows revert to their
             # init values rather than stale garbage (XLA folds the init
-            # tree into constants; no second cache is held)
+            # tree into constants; no second cache is held).  Shared page
+            # pools are exempt: co-resident requests own live rows there,
+            # and stale rows only ever surface masked to exact zeros.
             first = valid & (offsets == 0)
 
             def reset(cur, ini):
                 m = first.reshape((1, ns) + (1,) * (cur.ndim - 2))
                 return jnp.where(m, ini.astype(cur.dtype), cur)
 
-            caches = jax.tree_util.tree_map(
-                reset, caches, M.init_cache(cfg, ns, max_seq))
+            if paged_mode:
+                init_tree = M.init_cache(cfg, ns, max_seq,
+                                         num_pages=free.shape[0])
+                caches = jax.tree_util.tree_map(
+                    lambda cur, ini, pool: cur if pool else reset(cur, ini),
+                    caches, init_tree, pool_flags)
+            else:
+                caches = jax.tree_util.tree_map(
+                    reset, caches, M.init_cache(cfg, ns, max_seq))
             # unembed only each slot's true last prompt row (the one whose
             # logits can be sampled), not all C chunk positions
             idx = jnp.clip(true_lens - 1 - offsets, 0, C - 1)
+            pv = self._paged_kv(state)(valid) if paged_mode else None
             logits, _, new_caches = M.forward(
                 params, {"tokens": tokens}, cfg, caches=caches,
-                cache_pos=offsets, gather_pos=idx)
+                cache_pos=offsets, gather_pos=idx, paged=pv)
 
             def merge(old, new):
                 m = valid.reshape((1, ns) + (1,) * (old.ndim - 2))
                 return jnp.where(m, new.astype(old.dtype), old)
 
-            caches = jax.tree_util.tree_map(merge, caches, new_caches)
+            if paged_mode:
+                # pool leaves already masked their writes at scatter time;
+                # per-slot leaves (recurrent state, xattn) merge as before
+                caches = jax.tree_util.tree_map(
+                    lambda old, new, pool: new if pool else merge(old, new),
+                    caches, new_caches, pool_flags)
+            else:
+                caches = jax.tree_util.tree_map(merge, caches, new_caches)
             last = logits[:, 0]                                 # (S, V)
             final = valid & (offsets + C >= true_lens)
             keys0 = smp.request_keys(base_key, seeds)
@@ -241,12 +391,19 @@ class Engine:
                 else jnp.zeros_like(final)
             act = final & (budgets0 > 0) & ~hit_eos \
                 & (true_lens < max_seq - 1)
-            state = SlotState(
+            state = state._replace(
                 last_tok=jnp.where(final, toks, state.last_tok),
                 pos=jnp.where(final, true_lens, state.pos),
                 budget=jnp.where(final, budgets0, state.budget),
                 active=jnp.where(final, act, state.active),
                 rng=jnp.where(final[:, None], keys, state.rng))
+            if paged_mode:
+                # a request that terminates AT admission (first token EOS,
+                # or no decode room) must give its pages back right here
+                dead = final & ~act
+                free, n_pages = _reclaim_pages(state.free, state.tables,
+                                               state.n_pages, dead)
+                state = state._replace(free=free, n_pages=n_pages)
             return state, caches, toks
 
         return admit
@@ -254,6 +411,13 @@ class Engine:
     # ------------------------------------------------------------------
     # host-side request plumbing
     # ------------------------------------------------------------------
+
+    def _need_pages(self, prompt_len: int, max_new: int) -> int:
+        """Pages a request occupies for its whole lifetime: prompt rows
+        plus one KV row per decode step (the first token comes from the
+        prefill logits), clipped to the max_seq-1 generation ceiling."""
+        rows = min(prompt_len + max_new - 1, self.max_seq - 1)
+        return -(-rows // self.page_size)
 
     def submit(self, prompt, max_new_tokens: int = 16,
                seed: int | None = None) -> Request:
@@ -263,6 +427,20 @@ class Engine:
             # earlier cache rows and "complete" with scrambled state
             raise ValueError(f"prompt length {len(prompt)} must be in "
                              f"[1, max_seq-1={self.max_seq - 1}]")
+        if max_new_tokens < 1:
+            # budgets0 = max_new_tokens - 1 would underflow to -1 while the
+            # admit path still emits the prefill token — a request asking
+            # for 0 tokens used to get 1
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
+        if self.kv_layout == "paged":
+            need = self._need_pages(len(prompt), max_new_tokens)
+            if need > self.num_pages:
+                raise ValueError(
+                    f"request needs {need} pages ({len(prompt)} prompt + "
+                    f"{max_new_tokens} new tokens at page_size="
+                    f"{self.page_size}) but the pool only has "
+                    f"{self.num_pages}")
         # uid comes from a monotonic counter: queue length would recycle
         # ids once requests drain, aliasing two live requests
         uid = next(self._next_uid)
@@ -275,12 +453,27 @@ class Engine:
 
     def _admit(self):
         ns, C = self.num_slots, self.prefill_chunk
+        paged = self.kv_layout == "paged"
         admitted: list[tuple[int, Request]] = []
+        grants: dict[int, int] = {}
         for slot in range(ns):
-            if self.slot_req[slot] is None and self._queue:
-                req = self._queue.pop(0)
-                self.slot_req[slot] = req
-                admitted.append((slot, req))
+            if self.slot_req[slot] is not None or not self._queue:
+                continue
+            if paged:
+                need = self._need_pages(len(self._queue[0].prompt),
+                                        self._queue[0].max_new_tokens)
+                if self.pages_in_use + need > self.num_pages:
+                    # pool exhausted: hold the WHOLE queue (FIFO — skipping
+                    # the head for a smaller request behind it would make
+                    # admission order depend on pool state)
+                    break
+                grants[slot] = need
+                self.pages_in_use += need
+                self._slot_pages[slot] = need
+            req = self._queue.pop(0)
+            self.slot_req[slot] = req
+            admitted.append((slot, req))
+        self.pages_high_water = max(self.pages_high_water, self.pages_in_use)
         if not admitted:
             return
         n_chunks = {s: max(1, -(-len(r.prompt) // C)) for s, r in admitted}
@@ -292,15 +485,20 @@ class Engine:
             true_lens = np.ones((ns,), np.int32)
             seeds = np.zeros((ns,), np.int32)
             budgets0 = np.zeros((ns,), np.int32)
+            new_pages = np.zeros((ns,), np.int32)
             for slot, req in admitted:
                 if ci >= n_chunks[slot]:
                     continue
                 off = ci * C
-                if ci == n_chunks[slot] - 1:
-                    # a final chunk whose padded end would cross max_seq
-                    # slides back inside the cache (dynamic_update_slice
-                    # would clamp the write start and scramble rows);
-                    # the re-covered rows recompute to identical values
+                if ci == 0 and paged:
+                    new_pages[slot] = grants[slot]
+                if ci == n_chunks[slot] - 1 and not paged:
+                    # dense only: a final chunk whose padded end would
+                    # cross max_seq slides back inside the cache
+                    # (dynamic_update_slice would clamp the write start and
+                    # scramble rows); the re-covered rows recompute to
+                    # identical values.  The paged scatter drops
+                    # out-of-range rows instead, so no slide is needed.
                     off = min(off, max(0, self.max_seq - C))
                 piece = req.prompt[off:off + C]
                 tokens[slot, :len(piece)] = piece
@@ -313,7 +511,7 @@ class Engine:
                 self.params, self.state, self.caches, jnp.asarray(tokens),
                 jnp.asarray(valid), jnp.asarray(offsets),
                 jnp.asarray(true_lens), jnp.asarray(seeds),
-                jnp.asarray(budgets0))
+                jnp.asarray(budgets0), jnp.asarray(new_pages))
             self.n_admit_calls += 1
             for slot, req in admitted:
                 if ci == n_chunks[slot] - 1:
@@ -327,9 +525,16 @@ class Engine:
             req.t_first = now
             self.n_generated += 1
             if not active[slot]:
-                req.done = True
-                self.slot_req[slot] = None
+                self._release_slot(slot)
         self.n_syncs += 1
+
+    def _release_slot(self, slot: int) -> None:
+        """Host-side retirement: mark the request done, free the slot and
+        mirror the device-side page reclaim in the occupancy counters."""
+        self.slot_req[slot].done = True
+        self.slot_req[slot] = None
+        self.pages_in_use -= self._slot_pages[slot]
+        self._slot_pages[slot] = 0
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
@@ -354,8 +559,7 @@ class Engine:
                     req.out_tokens.append(int(toks[t, slot]))
                     self.n_generated += 1
             if not active[slot]:
-                req.done = True
-                self.slot_req[slot] = None
+                self._release_slot(slot)
         return True
 
     def run(self, max_ticks: int = 10_000) -> None:

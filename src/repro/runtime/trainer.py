@@ -18,10 +18,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.models import model as M

@@ -13,8 +13,12 @@ Only the strategies the suite uses are implemented (`sampled_from`,
 """
 from __future__ import annotations
 
+# the whole point of this module is re-exporting these names; __all__
+# marks them used for pyflakes (which, unlike flake8, ignores noqa)
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "strategies"]
+
 try:                                    # pragma: no cover - env-dependent
-    from hypothesis import given, settings, strategies  # noqa: F401
+    from hypothesis import given, settings, strategies
     HAVE_HYPOTHESIS = True
 except ImportError:
     HAVE_HYPOTHESIS = False

@@ -1,7 +1,7 @@
 """Pin the 10 assigned architecture configs to the assignment sheet."""
 import pytest
 
-from repro.configs import ARCH_IDS, FULL, get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.configs.archs import SHAPES, all_cells, shape_applicable
 
 ASSIGNMENT = {

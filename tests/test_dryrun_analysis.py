@@ -3,7 +3,6 @@ pure text/number functions; the launch path itself is covered by the fleet
 results in results/dryrun)."""
 import json
 import glob
-import os
 
 import pytest
 

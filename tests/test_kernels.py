@@ -5,7 +5,7 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core.quant import qrange, quantize
+from repro.core.quant import qrange
 from repro.kernels import ops, ref
 from repro.kernels.bramac_matmul import bramac_matmul
 from repro.kernels.mac2_kernel import mac2_mvm_kernel

@@ -1,0 +1,86 @@
+"""On-device sampling (runtime/sampling.py) unit tests.
+
+The serving parity suite exercises sampling through the engine; these
+tests pin the per-method masking semantics directly — most importantly
+the top-k regression: a value-threshold mask (`l >= kth`) kept every
+logit tied with the k-th largest, so tie-heavy distributions sampled from
+a nucleus larger than k.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.sampling import SamplingConfig, request_keys, sample
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _draws(logits, sc, n=64, seed=0):
+    """Sampled token set over n independent keys for one logits row."""
+    keys = request_keys(jax.random.PRNGKey(seed),
+                        jnp.arange(n, dtype=jnp.int32))
+    toks, new_keys = sample(jnp.broadcast_to(logits, (n, logits.shape[-1])),
+                            keys, sc)
+    assert new_keys.shape == keys.shape
+    return set(np.asarray(toks).tolist())
+
+
+def test_top_k_ties_keep_exactly_k():
+    """Regression: with every logit tied, `l >= kth` kept the WHOLE vocab.
+    The rank-based mask keeps exactly k tokens (lowest indices win ties,
+    matching lax.top_k's deterministic tie-break)."""
+    flat = jnp.zeros((16,), jnp.float32)
+    got = _draws(flat, SamplingConfig(method="top_k", top_k=3), n=256)
+    assert got == {0, 1, 2}
+
+
+def test_top_k_ties_straddling_the_cutoff():
+    """Ties straddling the k-th rank: logits [9, 7, 7, 7, 1, ...] with k=2
+    must keep token 0 and exactly ONE of the tied 7s (index 1), never all
+    three."""
+    l = jnp.asarray([9.0, 7.0, 7.0, 7.0, 1.0, 0.0, 0.0, 0.0])
+    got = _draws(l, SamplingConfig(method="top_k", top_k=2), n=256)
+    assert got == {0, 1}
+
+
+def test_top_k_distinct_logits_unchanged():
+    """No ties: the rank mask and the old value threshold agree — the k
+    largest logits stay, everything else is excluded."""
+    l = jnp.asarray([5.0, 3.0, 4.0, 1.0, 2.0, 0.0])
+    got = _draws(l, SamplingConfig(method="top_k", top_k=3), n=256)
+    assert got == {0, 1, 2} or got <= {0, 1, 2}   # k=3 keeps logits 5,4,3
+
+
+def test_top_k_covers_whole_vocab_when_k_exceeds_it():
+    l = jnp.asarray([0.0, 0.0, 0.0, 0.0])
+    got = _draws(l, SamplingConfig(method="top_k", top_k=9), n=512)
+    assert got == {0, 1, 2, 3}
+
+
+def test_top_p_keeps_best_token_and_truncates_tail():
+    """A near-deterministic distribution at top_p=0.5 collapses to the
+    argmax; a flat one keeps more than a single token."""
+    sharp = jnp.asarray([10.0, 0.0, 0.0, 0.0])
+    assert _draws(sharp, SamplingConfig(method="top_p", top_p=0.5)) == {0}
+    flat = jnp.zeros((4,), jnp.float32)
+    got = _draws(flat, SamplingConfig(method="top_p", top_p=0.9), n=256)
+    assert len(got) > 1
+
+
+def test_greedy_consumes_no_randomness():
+    logits = jnp.asarray([[1.0, 5.0, 2.0], [3.0, 0.0, 1.0]])
+    keys = request_keys(jax.random.PRNGKey(1), jnp.asarray([4, 9]))
+    toks, new_keys = sample(logits, keys, SamplingConfig(method="greedy"))
+    assert np.asarray(toks).tolist() == [1, 0]
+    assert (np.asarray(new_keys) == np.asarray(keys)).all()
+
+
+def test_stochastic_methods_advance_keys_deterministically():
+    logits = jnp.asarray([[0.0, 1.0, 2.0, 3.0]])
+    keys = request_keys(jax.random.PRNGKey(2), jnp.asarray([7]))
+    sc = SamplingConfig(method="temperature", temperature=0.7)
+    t1, k1 = sample(logits, keys, sc)
+    t2, k2 = sample(logits, keys, sc)
+    assert np.asarray(t1).tolist() == np.asarray(t2).tolist()
+    assert (np.asarray(k1) == np.asarray(k2)).all()
+    assert not (np.asarray(k1) == np.asarray(keys)).all()

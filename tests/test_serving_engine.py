@@ -2,10 +2,12 @@
 
 Covers the compiled serving loop end to end: greedy bit-parity with the
 seed host loop (exact-length prefill + one decode per token) across mixed
-prompt lengths, chunk boundaries and staggered admissions; fused
-multi-step decode (`decode_steps`) equivalence; on-device sampling
+prompt lengths, chunk boundaries and staggered admissions — under BOTH KV
+layouts (the paged block-table pool and the dense per-slot reservation);
+fused multi-step decode (`decode_steps`) equivalence; on-device sampling
 reproducibility; admission-time EOS termination; the context-manager
-contract; and max_seq budget clipping."""
+contract; max_seq budget clipping; and the paged pool's allocation /
+reclaim / backpressure behavior under cache pressure."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -46,11 +48,16 @@ def reference_greedy(cfg, params, prompt, max_new, max_seq):
 
 # --- greedy parity ----------------------------------------------------------
 
-def test_greedy_parity_chunked_prefill_staggered_admissions(granite):
+LAYOUTS = ("dense", "paged")
+
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_greedy_parity_chunked_prefill_staggered_admissions(granite, layout):
     """Token streams bit-identical to the seed loop: prompt lengths below /
     at / across the 16-token prefill-chunk boundary, admitted in waves
     through 2 slots (every request after the first two queues behind a
-    running one)."""
+    running one) — the paged block-table layout must match the dense
+    reservation bit for bit."""
     cfg, params = granite
     rng = np.random.default_rng(0)
     lens = (3, 16, 17, 29, 40)
@@ -58,15 +65,20 @@ def test_greedy_parity_chunked_prefill_staggered_admissions(granite):
     prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
     refs = [reference_greedy(cfg, params, p, n, 64)
             for p, n in zip(prompts, news)]
-    eng = Engine(cfg, params, num_slots=2, max_seq=64)
+    eng = Engine(cfg, params, num_slots=2, max_seq=64, kv_layout=layout)
     reqs = [eng.submit(p, n) for p, n in zip(prompts, news)]
     eng.run()
     for r, ref in zip(reqs, refs):
         assert r.done
         assert r.out_tokens == ref
+    if layout == "paged":
+        # everything terminated -> every page is back on the free list
+        assert eng.pages_in_use == 0
+        assert 0 < eng.pages_high_water <= eng.num_pages
 
 
-def test_decode_steps_equivalent_to_single_step_greedy(granite):
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_decode_steps_equivalent_to_single_step_greedy(granite, layout):
     """Fusing N decode steps per tick must not change greedy streams —
     only the host sync count (one per tick, not one per token)."""
     cfg, params = granite
@@ -74,7 +86,8 @@ def test_decode_steps_equivalent_to_single_step_greedy(granite):
     prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (6, 21, 11)]
     streams, syncs = {}, {}
     for ds in (1, 3, 8):
-        eng = Engine(cfg, params, num_slots=2, max_seq=64, decode_steps=ds)
+        eng = Engine(cfg, params, num_slots=2, max_seq=64, decode_steps=ds,
+                     kv_layout=layout)
         reqs = [eng.submit(p, 7) for p in prompts]
         eng.run()
         assert all(r.done for r in reqs)
@@ -214,13 +227,14 @@ def test_eos_mid_stream_stops_generation(granite):
         assert r.done and r.out_tokens == want
 
 
-def test_max_seq_clips_generation(granite):
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_max_seq_clips_generation(granite, layout):
     """A request whose budget overruns the cache stops at max_seq-1, like
     the seed loop."""
     cfg, params = granite
     prompt = np.arange(1, 29, dtype=np.int32)          # plen 28
     ref = reference_greedy(cfg, params, prompt, 16, 32)
-    eng = Engine(cfg, params, num_slots=2, max_seq=32)
+    eng = Engine(cfg, params, num_slots=2, max_seq=32, kv_layout=layout)
     r = eng.submit(prompt, 16)
     eng.run()
     assert r.done
@@ -228,16 +242,19 @@ def test_max_seq_clips_generation(granite):
     assert len(r.out_tokens) == 1 + (32 - 1 - 28)      # admission + 3 decodes
 
 
-def test_final_chunk_slides_inside_tight_cache(granite):
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_final_chunk_crossing_cache_end_tight_cache(granite, layout):
     """Regression: with max_seq=24 and plen=19 the padded final chunk
-    (rows 16..31) would cross the cache end; dynamic_update_slice clamps
-    the write start and scrambles earlier rows.  The final chunk must
-    slide back inside the cache — bit-parity with the seed loop holds
-    because the re-covered rows recompute to identical values."""
+    (rows 16..31) crosses the cache end.  Dense slides the chunk back
+    inside the cache (dynamic_update_slice would clamp the write start and
+    scramble rows; the re-covered rows recompute to identical values);
+    paged simply drops the out-of-range rows at scatter time — and 24 is
+    not page-aligned, so this also exercises the gathered view's max_seq
+    slice.  Both must bit-match the seed loop."""
     cfg, params = granite
     prompt = np.arange(1, 20, dtype=np.int32)          # plen 19
     ref = reference_greedy(cfg, params, prompt, 4, 24)
-    eng = Engine(cfg, params, num_slots=1, max_seq=24)
+    eng = Engine(cfg, params, num_slots=1, max_seq=24, kv_layout=layout)
     r = eng.submit(prompt, 4)
     eng.run()
     assert r.done and r.out_tokens == ref
@@ -266,12 +283,16 @@ def test_recurrent_slot_reuse_starts_from_fresh_state():
     assert got.done and got.out_tokens == want.out_tokens
 
 
-def test_oversized_and_empty_prompts_rejected(granite):
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_oversized_and_empty_prompts_rejected(granite, layout):
     """A prompt that can't fit the cache would clamp its chunk offsets
     into earlier rows and 'complete' with scrambled state — submit() must
-    reject it up front (and the empty prompt, which has no last logits)."""
+    reject it up front (and the empty prompt, which has no last logits).
+    A prompt of exactly max_seq-1 is the admissible ceiling in BOTH
+    layouts: it prefills, emits its admission token, and stops with no
+    decode room."""
     cfg, params = granite
-    eng = Engine(cfg, params, num_slots=1, max_seq=32)
+    eng = Engine(cfg, params, num_slots=1, max_seq=32, kv_layout=layout)
     with pytest.raises(ValueError, match="prompt length"):
         eng.submit(np.arange(32, dtype=np.int32), 4)   # needs max_seq-1
     with pytest.raises(ValueError, match="prompt length"):
@@ -279,6 +300,99 @@ def test_oversized_and_empty_prompts_rejected(granite):
     r = eng.submit(np.arange(31, dtype=np.int32), 4)   # boundary fits
     eng.run()
     assert r.done and len(r.out_tokens) == 1           # no decode room
+    if layout == "paged":
+        assert eng.pages_in_use == 0                   # reclaimed at admit
+
+
+def test_submit_rejects_nonpositive_max_new_tokens(granite):
+    """Regression: budgets0 = max_new_tokens - 1 underflowed to -1 while
+    the admit path still emitted the prefill token, so a request asking
+    for 0 tokens got 1.  Now rejected at submit for both layouts."""
+    cfg, params = granite
+    for layout in LAYOUTS:
+        eng = Engine(cfg, params, num_slots=1, max_seq=32, kv_layout=layout)
+        for bad in (0, -3):
+            with pytest.raises(ValueError, match="max_new_tokens"):
+                eng.submit([1, 2, 3], max_new_tokens=bad)
+        assert not eng._queue                          # nothing enqueued
+        r = eng.submit([1, 2, 3], max_new_tokens=1)    # boundary is legal
+        eng.run()
+        assert r.done and len(r.out_tokens) == 1
+
+
+# --- paged pool: pressure, reclaim, backpressure ----------------------------
+
+def test_pool_exhaustion_backpressure_and_reclaim(granite):
+    """Submit more live tokens than the pool holds: admission must hold
+    queued requests (FIFO) until terminating requests reclaim pages, every
+    request must still complete with seed-loop parity, and the high-water
+    mark must respect the pool bound."""
+    cfg, params = granite
+    rng = np.random.default_rng(7)
+    # each request: 20-token prompt + 10 new = 29 rows -> 2 pages of 16;
+    # pool of 3 pages fits only ONE resident request at a time
+    prompts = [rng.integers(0, cfg.vocab_size, size=20) for _ in range(4)]
+    refs = [reference_greedy(cfg, params, p, 10, 64) for p in prompts]
+    eng = Engine(cfg, params, num_slots=4, max_seq=64, kv_layout="paged",
+                 num_pages=3)
+    reqs = [eng.submit(p, 10) for p in prompts]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert [r.out_tokens for r in reqs] == refs
+    assert eng.pages_high_water == 2                   # one resident at a time
+    assert eng.pages_in_use == 0                       # all reclaimed
+    # a single request that could never fit the pool is rejected up front
+    with pytest.raises(ValueError, match="pages"):
+        eng.submit(rng.integers(0, cfg.vocab_size, size=60), 4)
+
+
+def test_paged_pool_capacity_below_dense_reservation(granite):
+    """The capacity argument of the paged layout: requests whose dense
+    footprint (num_slots * max_seq rows) exceeds the pool still serve
+    fine because occupancy is bounded by live tokens, and slots admit
+    concurrently whenever pages allow."""
+    cfg, params = granite
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n)
+               for n in (5, 9, 13, 6, 11, 8)]
+    refs = [reference_greedy(cfg, params, p, 6, 64) for p in prompts]
+    # dense would reserve 4 slots x 64 rows = 16 pages; give the pool 4
+    eng = Engine(cfg, params, num_slots=4, max_seq=64, kv_layout="paged",
+                 num_pages=4)
+    reqs = [eng.submit(p, 6) for p in prompts]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert [r.out_tokens for r in reqs] == refs
+    assert eng.pages_high_water <= 4 < 4 * 64 // cfg.page_size
+
+
+def test_recurrent_paged_parity_with_chunked_boundary():
+    """Recurrent mixers (prefill_chunk forced to 1) drive the paged layout
+    through the per-token admission path; streams must match the dense
+    layout bit for bit, including a prompt long enough to span multiple
+    pages with page_size=4."""
+    cfg = get_config("jamba-1.5-large-398b", smoke=True).replace(page_size=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in (6, 9)]
+    streams = {}
+    for layout in LAYOUTS:
+        eng = Engine(cfg, params, num_slots=2, max_seq=48, kv_layout=layout)
+        assert eng.prefill_chunk == 1
+        reqs = [eng.submit(p, 4) for p in prompts]
+        eng.run()
+        assert all(r.done for r in reqs)
+        streams[layout] = [r.out_tokens for r in reqs]
+    assert streams["dense"] == streams["paged"]
+
+
+def test_kv_layout_validation(granite):
+    cfg, params = granite
+    with pytest.raises(ValueError, match="kv_layout"):
+        Engine(cfg, params, num_slots=1, max_seq=16, kv_layout="blocked")
+    for bad in (-2, 0):                 # 0 must raise, not silently default
+        with pytest.raises(ValueError, match="num_pages"):
+            Engine(cfg, params, num_slots=1, max_seq=16, num_pages=bad)
 
 
 # --- context manager --------------------------------------------------------

@@ -1,7 +1,6 @@
 """Integration: QAT training learns; optimizer state (incl. Q8 moments)
 survives checkpoint round-trips; schedules behave."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import ckpt
