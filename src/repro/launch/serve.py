@@ -6,7 +6,8 @@
         [--capacity-factor 1.0] [--dispatch per_source] \
         [--sampling top_p --temperature 0.8 --top-p 0.95] \
         [--decode-steps 8] [--prefill-chunk 16] \
-        [--kv-layout paged|dense] [--page-size 16] [--num-pages 12]
+        [--kv-layout paged|dense] [--page-size 16] [--num-pages 12] \
+        [--prefix-cache on|off] [--prefix-chunk 16]
 """
 from __future__ import annotations
 
@@ -72,6 +73,17 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="total pages in the shared pool (0 = capacity-"
                          "equal to dense: slots * ceil(max_seq/page_size))")
+    ap.add_argument("--prefix-cache", default="on", choices=("on", "off"),
+                    help="share cached prompt prefixes across requests "
+                         "(paged layout only; recurrent archs opt out; "
+                         "%(default)s)")
+    ap.add_argument("--prefix-chunk", type=int, default=0,
+                    help="prefix-cache hash granularity in tokens "
+                         "(0 = page_size)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many identical 'system prompt' "
+                         "tokens to every request — exercises the prefix "
+                         "cache")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -98,9 +110,13 @@ def main():
                 top_p=args.top_p, decode_steps=args.decode_steps,
                 prefill_chunk=args.prefill_chunk, seed=args.seed,
                 kv_layout=args.kv_layout,
-                num_pages=args.num_pages or None) as eng:
-        reqs = [eng.submit(rng.integers(0, cfg.vocab_size,
-                                        size=int(rng.integers(4, 24))),
+                num_pages=args.num_pages or None,
+                prefix_cache=args.prefix_cache == "on",
+                prefix_chunk=args.prefix_chunk or None) as eng:
+        shared = rng.integers(0, cfg.vocab_size, size=args.shared_prefix)
+        reqs = [eng.submit(np.concatenate([
+                    shared, rng.integers(0, cfg.vocab_size,
+                                         size=int(rng.integers(4, 24)))]),
                            args.new_tokens)
                 for _ in range(args.requests)]
         t0 = time.perf_counter()    # Request.t_first is perf_counter-based
@@ -125,6 +141,20 @@ def main():
                   f"({100 * hw_rows / dense_rows:.0f}% of the dense "
                   f"{dense_rows}-row reservation); "
                   f"{eng.pages_in_use} pages still in use")
+            st = eng.prefix_stats()
+            if st["enabled"]:
+                hist = eng.pool.refcount_hist()
+                print(f"  prefix cache: {st['hits']}/{st['hits'] + st['misses']}"
+                      f" hits ({100 * st['hit_rate']:.0f}%), "
+                      f"{st['tokens_skipped']} prefill tokens skipped "
+                      f"({st['chunks_skipped']} chunks), "
+                      f"{st['evictions']} evictions, "
+                      f"{st['cached_pages']} pages cached; "
+                      f"pages-shared high-water "
+                      f"{eng.pages_shared_high_water}; refcount hist "
+                      f"{{{', '.join(f'{r}: {n}' for r, n in enumerate(hist) if n)}}}")
+            else:
+                print("  prefix cache: off")
         else:
             print(f"  kv dense: {eng.num_slots} slots x {eng.max_seq} rows "
                   f"reserved up front ({eng.num_slots * eng.max_seq} rows)")

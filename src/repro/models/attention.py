@@ -52,22 +52,33 @@ class PagedKV:
                slots during prefill, active slots during decode); a masked
                sequence's rows never reach the pool, so co-resident
                sequences sharing it stay untouched.
+    owned      (B, max_pages) bool or None — per-table-entry write
+               permission from the refcounted allocator: entries mapped
+               read-only (prefix-cache shares) are False and their writes
+               are dropped, so a slot can never corrupt a page other
+               consumers read.  None (dense-era callers) means every
+               allocated entry is writable.
     """
     tables: jax.Array
     n_pages: jax.Array
     write_mask: jax.Array
     max_seq: int
     page_size: int
+    owned: jax.Array | None = None
 
 
 def paged_update(pool, new, positions, pv: PagedKV):
     """Scatter `new` (B, S, …) rows at absolute `positions` (B, S) through
     the block table into `pool` ((P, page_size, …)).  Masked / out-of-range
-    rows are routed to page id P and dropped."""
+    rows — and rows aimed at a shared (un-owned) page — are routed to page
+    id P and dropped."""
     P, ps = pool.shape[0], pv.page_size
     pg_idx = positions // ps
     ok = pv.write_mask[:, None] & (pg_idx < pv.n_pages[:, None]) \
         & (positions < pv.max_seq)
+    if pv.owned is not None:
+        ok &= jnp.take_along_axis(
+            pv.owned, jnp.clip(pg_idx, 0, pv.tables.shape[1] - 1), axis=1)
     pg = jnp.take_along_axis(
         pv.tables, jnp.clip(pg_idx, 0, pv.tables.shape[1] - 1), axis=1)
     pg = jnp.where(ok, pg, P)                       # OOB page id -> dropped

@@ -50,7 +50,11 @@ def forward(params, batch, cfg: ModelConfig, caches=None, cache_pos=None,
     returns (B, 1, vocab) logits like last_only.
     paged: an attention.PagedKV bundle — caches hold shared page pools
     instead of dense per-sequence reservations, and attention
-    gathers/scatters KV rows through its block tables."""
+    gathers/scatters KV rows through its block tables.  The bundle's
+    block tables / refcounts / ownership bits come from the engine's
+    `runtime.pages.PagePool` allocator state: entries mapped read-only
+    (prefix-cache shares) carry owned=False, and the paged scatter drops
+    their writes so shared pages are never corrupted."""
     x = _inputs_to_hidden(params, batch, cfg)
     B, S = x.shape[:2]
     if cache_pos is not None:
@@ -88,7 +92,8 @@ def loss_fn(params, batch, cfg: ModelConfig, aux_weight: float = 0.01):
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int, num_pages=None):
     """num_pages=None: dense [batch, max_seq] KV reservations.  Otherwise
     attention KV lives in a shared pool of `num_pages` pages of
-    `cfg.page_size` rows each (block tables are engine state, passed to
+    `cfg.page_size` rows each (block tables, refcounts and page ownership
+    are engine state — a `runtime.pages.PagePool` — passed to
     forward/decode_step as an attention.PagedKV bundle)."""
     return tf.init_stack_cache(cfg, batch, max_seq, cfg.compute_dtype,
                                num_pages)

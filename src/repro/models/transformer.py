@@ -155,7 +155,10 @@ def stack_cache_pool_flags(cfg):
     """A pytree matching init_stack_cache's paged structure with True at
     shared page-pool leaves and False at per-slot leaves — engines use it
     to reset/merge only slot-private state (pools are co-owned and must
-    never be blanket-reset or slot-masked)."""
+    never be blanket-reset or slot-masked), and `runtime.pages.cow_copy`
+    uses it to route copy-on-write page splits to every pool leaf (each
+    stacked leaf is (n_periods, num_pages, page_size, ...) — the page
+    axis is axis 1) while leaving per-slot leaves untouched."""
     flags = {}
     for i, spec in enumerate(cfg.layer_pattern):
         mixer, _ = parse_spec(spec)

@@ -1,0 +1,355 @@
+"""Refcounted KV page allocator with copy-on-write prefix sharing.
+
+This module owns EVERY mutation of the serving engine's shared KV page
+pool — the BRAMAC discipline of making the same stored bits serve many
+consumers, applied to the cache: a system prompt prefilled once is mapped
+read-only into every later request that starts with it, so warm-prefix
+admission skips the shared chunks' prefill compute entirely.
+
+Three cooperating pieces:
+
+  PagePool     — the device-resident allocator pytree (per-page refcounts,
+                 per-slot block tables, per-slot ownership bits).  All
+                 traced mutation goes through `admit_update` (evict →
+                 share → grant → register, in that order), `release`
+                 (refcount decrement to zero reclaims) and `cow_copy`
+                 (the copy-on-write split: a shared page's rows are copied
+                 into a freshly granted private page inside the jit'd
+                 admit, never written in place).
+
+  HostPool     — the host-side mirror.  It replays the exact device rules
+                 (including the grant order) from the same inputs, so the
+                 engine can make backpressure / eviction decisions and
+                 know every granted page id WITHOUT a device sync.
+                 `Engine(check_invariants=True)` compares the two after
+                 every sync point.
+
+  PrefixCache  — the host-side prefix registry: cumulative-hash chains of
+                 fixed `prefix_chunk`-token prompt prefixes mapped to the
+                 pool pages that hold their KV rows.  Matching is exact
+                 (keys are the token bytes — no hash collisions), chains
+                 hold ONE device reference per distinct page however many
+                 chains cover it, and LRU chains are evicted when
+                 admission would otherwise stall on a dry pool.
+
+Invariants (property-tested in tests/test_page_allocator_properties.py):
+
+  I1  refcounts are never negative.
+  I2  a page is free iff its refcount is 0: grants draw only from
+      refcount-0 pages, and a page returns to the free set exactly when
+      its last reference is released.
+  I3  sum(n_pages over slots) == sum(refs) - cached_pages: every live
+      reference is either a slot's block-table mapping or the single
+      cache reference a page with >= 1 registered chains holds.
+  I4  grants are deterministic: lowest free page id first, admitting
+      slots served in ascending slot order.
+  I5  at most one slot owns (may write) any page, and shared mappings are
+      never written: attention's paged scatter drops rows aimed at a page
+      the writing slot does not own, and divergence inside a shared page
+      is resolved by `cow_copy` into a fresh owned page at admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# device-resident allocator pytree
+# ---------------------------------------------------------------------------
+
+class PagePool(NamedTuple):
+    """Refcounted page-pool state; one device pytree for all slots.
+
+    refs[p]      — live references to page p: one per slot block-table
+                   mapping plus one if any registered prefix chain covers
+                   it.  0 means free (I2).
+    tables[s, j] — pool page holding slot s's rows
+                   [j*page_size, (j+1)*page_size).
+    n_pages[s]   — live table entries for slot s.
+    owned[s, j]  — slot s may WRITE through entry j (it granted the page
+                   or received it via copy-on-write).  Shared prefix
+                   mappings are read-only (owned=False); attention's
+                   paged scatter enforces this (I5)."""
+    refs: jax.Array      # (P,) i32
+    tables: jax.Array    # (S, mp) i32
+    n_pages: jax.Array   # (S,) i32
+    owned: jax.Array     # (S, mp) bool
+
+
+def init_pool(num_slots: int, table_len: int, num_pages: int) -> PagePool:
+    return PagePool(
+        refs=jnp.zeros((num_pages,), jnp.int32),
+        tables=jnp.zeros((num_slots, table_len), jnp.int32),
+        n_pages=jnp.zeros((num_slots,), jnp.int32),
+        owned=jnp.zeros((num_slots, table_len), bool))
+
+
+def free_mask(pool: PagePool) -> jax.Array:
+    """(P,) bool — free iff refcount 0 (I2)."""
+    return pool.refs == 0
+
+
+def admit_update(pool: PagePool, admitting, shared, n_shared, new_pages,
+                 evict_delta, register_delta) -> PagePool:
+    """One admission round of pool bookkeeping, in the fixed order the
+    host mirror replays: (1) eviction decrements free idle cached pages,
+    (2) shared prefix pages are mapped read-only into table entries
+    [0, n_shared) with a refcount bump each, (3) `new_pages[s]` fresh
+    pages are granted (lowest free id first, slots in ascending order —
+    I4) into entries [n_shared, n_shared + new_pages) with refcount 1 and
+    ownership, (4) registration bumps newly cached pages.
+
+    admitting (S,) bool — slots taking a new request this call.
+    shared (S, mp) i32  — cache-hit page ids (entries past n_shared[s]
+    are ignored).  evict/register_delta (P,) i32 — refcount deltas from
+    the host prefix registry (eviction negative, registration positive).
+    """
+    P = pool.refs.shape[0]
+    mp = pool.tables.shape[1]
+    refs = pool.refs + evict_delta
+    j = jnp.arange(mp, dtype=jnp.int32)[None, :]
+    sh_take = admitting[:, None] & (j < n_shared[:, None])
+    refs = refs.at[jnp.where(sh_take, shared, P)].add(1, mode="drop")
+    # grant AFTER shares bump: a page evicted and re-shared in the same
+    # round is no longer free and must not be granted
+    order = jnp.argsort(refs != 0, stable=True)       # free ids first, asc
+    starts = jnp.cumsum(new_pages) - new_pages        # ascending slot order
+    k = j - n_shared[:, None]                         # fresh-grant index
+    g_take = admitting[:, None] & (k >= 0) & (k < new_pages[:, None])
+    grant = order[jnp.clip(starts[:, None] + k, 0, max(P - 1, 0))] \
+        .astype(jnp.int32)
+    refs = refs.at[jnp.where(g_take, grant, P)].add(1, mode="drop")
+    tables = jnp.where(g_take, grant,
+                       jnp.where(sh_take, shared, pool.tables))
+    owned = jnp.where(g_take, True, jnp.where(sh_take, False, pool.owned))
+    n_pages = jnp.where(admitting, n_shared + new_pages, pool.n_pages)
+    return PagePool(refs + register_delta, tables, n_pages, owned)
+
+
+def release(pool: PagePool, dead) -> PagePool:
+    """Drop every reference `dead` slots hold (shared and owned alike);
+    a page whose refcount hits 0 is thereby free (I2) — cached pages keep
+    their registry reference and survive for future prefix hits."""
+    P = pool.refs.shape[0]
+    j = jnp.arange(pool.tables.shape[1], dtype=jnp.int32)[None, :]
+    held = dead[:, None] & (j < pool.n_pages[:, None])
+    refs = pool.refs.at[jnp.where(held, pool.tables, P)].add(-1, mode="drop")
+    return PagePool(refs, pool.tables,
+                    jnp.where(dead, 0, pool.n_pages),
+                    pool.owned & ~dead[:, None])
+
+
+def cow_copy(caches, pool_flags, src, dst):
+    """Copy-on-write split, inside the jit'd admit: for every slot s with
+    src[s] >= 0, copy page src[s]'s rows into page dst[s] in EVERY shared
+    pool leaf (all layers; per-slot leaves untouched).  The source — a
+    cached page holding a prefix that diverges from the admitting prompt
+    mid-page — is never written in place (I5); rows past the divergence
+    point are stale in the copy but stay causally masked until the slot's
+    own prefill/decode overwrites them."""
+    ok = src >= 0
+
+    def cp(leaf, is_pool):
+        if not is_pool:
+            return leaf
+        P = leaf.shape[1]                  # leaf: (n_periods, P, ps, ...)
+        rows = jnp.take(leaf, jnp.clip(src, 0, max(P - 1, 0)), axis=1)
+        return leaf.at[:, jnp.where(ok, dst, P)].set(rows, mode="drop")
+
+    return jax.tree_util.tree_map(cp, caches, pool_flags)
+
+
+# ---------------------------------------------------------------------------
+# host-side mirror
+# ---------------------------------------------------------------------------
+
+class HostPool:
+    """Numpy replay of the device allocator.  `admit_round` applies the
+    same evict → share → grant → register order and the same grant rule
+    (lowest free id first, rounds in the order given, which the engine
+    builds in ascending slot order), so every page id the device will
+    compute is known on the host without a sync."""
+
+    def __init__(self, num_pages: int, num_slots: int):
+        self.num_pages = num_pages
+        self.refs = np.zeros(num_pages, np.int32)
+        self.slot_tables: list[list[int]] = [[] for _ in range(num_slots)]
+        self.slot_owned: list[list[bool]] = [[] for _ in range(num_slots)]
+
+    @property
+    def free_pages(self) -> int:
+        return int((self.refs == 0).sum())
+
+    @property
+    def pages_in_use(self) -> int:
+        return int((self.refs > 0).sum())
+
+    @property
+    def pages_shared(self) -> int:
+        """Pages serving more than one consumer right now."""
+        return int((self.refs > 1).sum())
+
+    @property
+    def slot_refs_total(self) -> int:
+        return sum(len(t) for t in self.slot_tables)
+
+    def refcount_hist(self) -> np.ndarray:
+        """hist[r] = number of pages with refcount exactly r."""
+        return np.bincount(self.refs, minlength=1)
+
+    def _apply(self, delta: dict[int, int]) -> None:
+        for p, d in delta.items():
+            self.refs[p] += d
+            assert self.refs[p] >= 0, f"refcount of page {p} went negative"
+
+    def admit_round(self, grants, evict_delta, register_delta=None):
+        """grants: [(slot, shared_ids, n_fresh)] in ascending slot order.
+        Returns {slot: granted page ids}.  register_delta, when known at
+        call time, may also be applied later via `apply_register`."""
+        self._apply(evict_delta)
+        for _, shared_ids, _ in grants:
+            for p in shared_ids:
+                self.refs[p] += 1
+        free_ids = np.flatnonzero(self.refs == 0)
+        need = sum(n for _, _, n in grants)
+        assert need <= free_ids.size, \
+            f"grant of {need} pages exceeds {free_ids.size} free"
+        granted: dict[int, list[int]] = {}
+        i = 0
+        for slot, shared_ids, n_fresh in grants:
+            ids = [int(x) for x in free_ids[i:i + n_fresh]]
+            i += n_fresh
+            for p in ids:
+                self.refs[p] += 1
+            self.slot_tables[slot] = list(shared_ids) + ids
+            self.slot_owned[slot] = [False] * len(shared_ids) \
+                + [True] * n_fresh
+            granted[slot] = ids
+        if register_delta:
+            self._apply(register_delta)
+        return granted
+
+    def apply_register(self, register_delta: dict[int, int]) -> None:
+        self._apply(register_delta)
+
+    def release_slot(self, slot: int) -> None:
+        for p in self.slot_tables[slot]:
+            self.refs[p] -= 1
+            assert self.refs[p] >= 0, f"refcount of page {p} went negative"
+        self.slot_tables[slot] = []
+        self.slot_owned[slot] = []
+
+
+# ---------------------------------------------------------------------------
+# host-side prefix registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Chain:
+    end: int                   # prefix length in tokens (k * prefix_chunk)
+    pages: tuple[int, ...]     # pool pages holding rows [0, end)
+    last_use: int              # LRU clock
+
+
+class PrefixCache:
+    """Exact-match registry of prefill prefixes at `prefix_chunk`-token
+    granularity.  A chain for `end` tokens maps the ceil(end/page_size)
+    pages holding those rows; the last page may be partial (end not
+    page-aligned), in which case consumers receive it via copy-on-write
+    rather than a read-only mapping.  Each distinct page carries ONE
+    device/host refcount for the cache however many chains cover it."""
+
+    def __init__(self, prefix_chunk: int, page_size: int):
+        if prefix_chunk < 1:
+            raise ValueError(f"prefix_chunk must be >= 1, "
+                             f"got {prefix_chunk}")
+        self.prefix_chunk = prefix_chunk
+        self.page_size = page_size
+        self.chains: dict[bytes, _Chain] = {}
+        self.page_chains: dict[int, int] = {}     # page -> covering chains
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.tokens_skipped = 0
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self.page_chains)
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def match(self, keys, prompt_len: int):
+        """Longest registered chain among `keys` — the prompt's precomputed
+        chunk-prefix hashes (keys[i] covers (i+1)*prefix_chunk tokens) —
+        that is a PROPER prefix: matches are capped at prompt_len-1, the
+        final prompt token must always be computed since its logits seed
+        the first sampled token.
+
+        Returns (matched_tokens, full_page_ids, cow_src): full pages are
+        mapped read-only; cow_src (or -1) is the partial page whose rows
+        the admitting slot must receive as a private copy."""
+        best = None
+        for i, key in enumerate(keys):
+            if (i + 1) * self.prefix_chunk >= prompt_len:
+                break
+            c = self.chains.get(key)
+            if c is not None and (best is None or c.end > best.end):
+                best = c
+        if best is None:
+            self.misses += 1
+            return 0, [], -1
+        self.hits += 1
+        self.tokens_skipped += best.end
+        best.last_use = self._tick()
+        n_full = best.end // self.page_size
+        cow = int(best.pages[n_full]) if best.end % self.page_size else -1
+        return best.end, list(best.pages[:n_full]), cow
+
+    def register(self, keys, table_ids, delta) -> None:
+        """Add chains for every chunk-aligned prefix of a just-prefilled
+        prompt (keys[i] covers (i+1)*prefix_chunk tokens) whose rows live
+        in `table_ids` (the slot's block table).  Pages gaining their
+        first covering chain get +1 in `delta` (the single cache
+        reference of I3)."""
+        for i, key in enumerate(keys):
+            end = (i + 1) * self.prefix_chunk
+            c = self.chains.get(key)
+            if c is not None:
+                c.last_use = self._tick()
+                continue
+            pages = tuple(int(p) for p in table_ids[:-(-end // self.page_size)])
+            self.chains[key] = _Chain(end, pages, self._tick())
+            for p in pages:
+                n = self.page_chains.get(p, 0)
+                self.page_chains[p] = n + 1
+                if n == 0:
+                    delta[p] = delta.get(p, 0) + 1
+
+    def evict(self, need_free: int, eff: np.ndarray, delta) -> int:
+        """Evict LRU chains until `need_free` additional pages would be
+        free, judging freeness against `eff` — the mirror refcounts with
+        this admission round's pending shares/evictions already applied —
+        so idle cached pages are preferred over stalling admission.
+        Returns how many pages were actually freed."""
+        freed = 0
+        while freed < need_free and self.chains:
+            key = min(self.chains, key=lambda k: self.chains[k].last_use)
+            c = self.chains.pop(key)
+            self.evictions += 1
+            for p in c.pages:
+                self.page_chains[p] -= 1
+                if self.page_chains[p] == 0:
+                    del self.page_chains[p]
+                    delta[p] = delta.get(p, 0) - 1
+                    eff[p] -= 1
+                    if eff[p] == 0:
+                        freed += 1
+        return freed

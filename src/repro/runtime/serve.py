@@ -4,8 +4,8 @@ stream).
 
 The engine owns a fixed pool of `num_slots` sequences sharing one KV
 cache, plus a `SlotState` pytree (last token, position, budget, active
-mask, per-slot PRNG key, and — in the paged layout — the block tables and
-the free-page list) that lives on device for the engine's lifetime.  The
+mask, per-slot PRNG key, and — in the paged layout — the refcounted
+`pages.PagePool`) that lives on device for the engine's lifetime.  The
 serving loop is compiled data-flow, not Python control-flow — two jit'd
 functions do all the work:
 
@@ -17,6 +17,11 @@ functions do all the work:
            cache rows, and — on each prompt's final chunk — on-device
            sampling of the first token and the slot-state commit.  No
            per-prompt-length recompiles, no host-side full-cache scatter.
+           The first chunk of a round also carries the round's entire
+           pool transaction (`pages.admit_update`: evictions, read-only
+           prefix shares, fresh grants, registrations) plus the
+           copy-on-write page split for prompts that diverge from a
+           cached prefix mid-page.
 
   tick   — fused multi-step decode: `decode_steps` iterations of
            decode -> sample (greedy / temperature / top-k / top-p, keyed
@@ -30,27 +35,37 @@ KV layouts (`kv_layout=`):
   "paged" (default) — the BRAMAC memory discipline applied to the cache:
            attention KV lives in a shared pool of fixed `cfg.page_size`-row
            pages ("BRAM-array-sized" blocks) addressed through per-slot
-           int32 block tables.  Pages are granted at admission (lowest
-           free page id first — deterministic), writes scatter through the
-           table inside the jit'd forward, and a request's pages return to
-           the device-resident free list the moment it terminates inside
+           int32 block tables.  ALL pool mutation goes through the
+           refcounted allocator in `repro.runtime.pages` — grants at
+           admission (lowest free page id first — deterministic),
+           refcount-bumped read-only shares for prefix-cache hits,
+           release-to-zero reclaim the moment a request terminates inside
            the fused tick (or at admission, for first-token EOS).  When
-           the pool runs dry the admitter exerts backpressure: queued
-           requests wait, FIFO, until a terminating request reclaims
-           enough pages.  Co-resident requests are therefore bounded by
-           total live tokens — not `num_slots × max_seq` — while greedy
-           token streams stay bit-identical to the dense layout (masked
-           pool rows contribute exact zeros to the softmax, like the dense
-           cache's untouched rows).
+           the pool runs dry the admitter first evicts idle cached
+           prefixes (LRU), then exerts backpressure: queued requests
+           wait, FIFO, until a terminating request reclaims enough pages.
+           Greedy token streams stay bit-identical to the dense layout
+           (masked pool rows contribute exact zeros to the softmax, like
+           the dense cache's untouched rows).
 
   "dense" — the PR-4 layout: every slot reserves `max_seq` KV rows up
            front; kept as the parity oracle and for kernels that want the
            contiguous reservation.
 
+Prefix caching (`prefix_cache=True`, paged layout only): prompts are
+hashed at `submit` in fixed `prefix_chunk`-token pieces; admission maps
+the longest cached prefix's full pages into the slot's block table
+read-only (skipping their prefill compute entirely, so warm-prefix TTFT
+drops by ~the shared length) and the slot's own prefill starts at the
+matched offset.  A partially covered page is handed over as a private
+copy (copy-on-write) instead, so cached pages are never written.
+Recurrent-hybrid archs opt out silently (their state accumulates over
+every token) but stream identically.
+
 The Python `Engine` is a thin wrapper holding the request queue and the
-host mirror of slot/page occupancy; it is also a context manager so the
-process-global sharding ctx activated by `mesh=` is released even when
-serving raises.
+`pages.HostPool` mirror of the device allocator; it is also a context
+manager so the process-global sharding ctx activated by `mesh=` is
+released even when serving raises.
 """
 from __future__ import annotations
 
@@ -66,25 +81,21 @@ import numpy as np
 from repro.models import attention as attn
 from repro.models import model as M
 from repro.parallel import sharding as shd
+from repro.runtime import pages as pg
 from repro.runtime import sampling as smp
 
 
 class SlotState(NamedTuple):
     """Per-slot decode state; one device-resident pytree for all slots.
 
-    `tables` / `n_pages` / `free` are the paged-KV bookkeeping (empty
-    arrays under the dense layout): `tables[s, j]` is the pool page
-    holding slot s's rows [j*page_size, (j+1)*page_size), `n_pages[s]`
-    how many table entries are live, and `free` the shared free-page
-    mask that allocation (admit) and reclaim (tick) edit on device."""
+    `pages` is the refcounted paged-KV allocator state (empty arrays
+    under the dense layout); see `repro.runtime.pages.PagePool`."""
     last_tok: jax.Array     # (S,) i32  last sampled token (next decode input)
     pos: jax.Array          # (S,) i32  next cache index to write
     budget: jax.Array       # (S,) i32  tokens still to emit after this one
     active: jax.Array       # (S,) bool slot is mid-generation
     rng: jax.Array          # (S, 2) u32 per-request sampling key chain
-    tables: jax.Array       # (S, max_pages) i32 block tables (paged)
-    n_pages: jax.Array      # (S,) i32  pages allocated per slot (paged)
-    free: jax.Array         # (P,) bool free-page mask (paged)
+    pages: pg.PagePool      # refcounted page allocator (paged layout)
 
 
 @dataclasses.dataclass
@@ -97,35 +108,9 @@ class Request:
     done: bool = False
     t_submit: float = 0.0
     t_first: float = 0.0          # wall time the first token landed (TTFT)
-
-
-def _alloc_pages(free, tables, n_pages, new_pages):
-    """Grant `new_pages[s]` pages to each admitting slot s from the shared
-    free mask, lowest free page id first (stable argsort — deterministic
-    placement).  Admitting slots start empty (their previous occupant's
-    pages were reclaimed), so grants overwrite table entries from 0."""
-    P = free.shape[0]
-    mp = tables.shape[1]
-    order = jnp.argsort(~free, stable=True)          # free page ids first
-    starts = jnp.cumsum(new_pages) - new_pages       # (S,) offsets in order
-    j = jnp.arange(mp, dtype=jnp.int32)[None, :]
-    take = j < new_pages[:, None]                    # (S, mp) granted entries
-    grant = order[jnp.clip(starts[:, None] + j, 0, P - 1)].astype(jnp.int32)
-    tables = jnp.where(take, grant, tables)
-    free = free.at[jnp.where(take, grant, P)].set(False, mode="drop")
-    n_pages = jnp.where(new_pages > 0, new_pages, n_pages)
-    return free, tables, n_pages
-
-
-def _reclaim_pages(free, tables, n_pages, dead):
-    """Return every page owned by a `dead` slot to the free mask.  Stale
-    table entries are left in place — they are only ever read through the
-    causal mask (exact-zero contributions) until the slot is re-granted."""
-    P = free.shape[0]
-    j = jnp.arange(tables.shape[1], dtype=jnp.int32)[None, :]
-    owned = dead[:, None] & (j < n_pages[:, None])
-    free = free.at[jnp.where(owned, tables, P)].set(True, mode="drop")
-    return free, jnp.where(dead, 0, n_pages)
+    # prefix-cache keys, hashed once at submit: prefix_keys[i] identifies
+    # the (i+1)*prefix_chunk-token prefix of `prompt`
+    prefix_keys: tuple = ()
 
 
 class Engine:
@@ -152,6 +137,14 @@ class Engine:
       num_pages     — paged pool size; default num_slots * ceil(max_seq /
                       cfg.page_size) (capacity-equal to dense — shrink it
                       to trade co-residency for memory)
+      prefix_cache  — share cached prompt prefixes across requests
+                      (paged layout only; recurrent mixers opt out)
+      prefix_chunk  — prefix hash granularity in tokens (default
+                      cfg.page_size; smaller values trade more
+                      copy-on-write splits for finer matching)
+      check_invariants — verify the HostPool mirror against the device
+                      allocator (refcounts, free popcount, block tables)
+                      after every sync; debug aid, costs extra transfers
     """
 
     def __init__(self, cfg, params, num_slots: int, max_seq: int,
@@ -162,7 +155,10 @@ class Engine:
                  temperature: float = 1.0, top_k: int = 0, top_p: float = 1.0,
                  decode_steps: int = 1, prefill_chunk: int = 16,
                  seed: int = 0, kv_layout: str = "paged",
-                 num_pages: int | None = None):
+                 num_pages: int | None = None,
+                 prefix_cache: bool = True,
+                 prefix_chunk: int | None = None,
+                 check_invariants: bool = False):
         # mesh may be a jax Mesh or a composed-mesh spec ("model=4",
         # "data=2,model=4", "2x4", 4, ...) resolved by sharding.build_mesh.
         # capacity_factor / dispatch override the MoE routing knobs on cfg
@@ -199,6 +195,7 @@ class Engine:
         self.eos_id = eos_id
         self.sampling = sampling
         self.decode_steps = decode_steps
+        self.check_invariants = check_invariants
         # recurrent mixers (mamba/mlstm/slstm) can't skip padding in their
         # state, so their prompts are fed token-by-token (chunk = 1); a
         # chunk can never exceed the cache (its write must fit max_seq)
@@ -222,28 +219,37 @@ class Engine:
                                        num_pages=self.num_pages)
             self._pool_flags = M.cache_pool_flags(cfg)
             mp, P = self.pages_per_slot, self.num_pages
+            self.pool: pg.HostPool | None = pg.HostPool(self.num_pages,
+                                                        num_slots)
         else:
             self.num_pages = 0
             self.caches = M.init_cache(cfg, num_slots, max_seq)
             self._pool_flags = None
             mp, P = 0, 0
+            self.pool = None
+        # --- prefix cache (paged only; recurrent state accumulates over
+        # every token, so those archs cannot share prefixes — they opt out
+        # silently but stream identically) ---
+        self.prefix_chunk = int(prefix_chunk) if prefix_chunk is not None \
+            else self.page_size
+        enabled = prefix_cache and kv_layout == "paged" and not recurrent
+        self.prefix = pg.PrefixCache(self.prefix_chunk, self.page_size) \
+            if enabled else None
         self.state = SlotState(
             last_tok=jnp.zeros((num_slots,), jnp.int32),
             pos=jnp.zeros((num_slots,), jnp.int32),
             budget=jnp.zeros((num_slots,), jnp.int32),
             active=jnp.zeros((num_slots,), bool),
             rng=jnp.zeros((num_slots, 2), jnp.uint32),
-            tables=jnp.zeros((num_slots, mp), jnp.int32),
-            n_pages=jnp.zeros((num_slots,), jnp.int32),
-            free=jnp.ones((P,), bool))
+            pages=pg.init_pool(num_slots, mp, P))
         self.slot_req: list[Request | None] = [None] * num_slots
         self._queue: list[Request] = []
-        # host mirror of pool occupancy: updated at admit (grant) and at
-        # the post-sync done scan (reclaim), so backpressure decisions
-        # never need an extra device sync
-        self.pages_in_use = 0
+        # pool-occupancy telemetry; occupancy itself lives in the HostPool
+        # mirror (`pages_in_use` property), kept in lockstep with the
+        # device allocator so backpressure never needs an extra sync
         self.pages_high_water = 0
-        self._slot_pages = [0] * num_slots
+        self.pages_shared_high_water = 0
+        self.prefill_chunks_skipped = 0
         # host<->device sync accounting for the serving bench: one sync per
         # jit'd tick / per admission round, regardless of decode_steps
         self.n_ticks = 0
@@ -261,19 +267,22 @@ class Engine:
     # compiled data-flow
     # ------------------------------------------------------------------
 
-    def _paged_kv(self, state):
+    def _paged_kv(self, pool: pg.PagePool):
         """The PagedKV bundle for one traced call; write_mask is supplied
-        by the caller (valid slots at admit, active slots in the tick)."""
+        by the caller (valid slots at admit, active slots in the tick).
+        `owned` routes writes aimed at shared prefix pages to the drop
+        index — a slot can never corrupt a page other consumers read."""
         def bundle(write_mask):
-            return attn.PagedKV(tables=state.tables, n_pages=state.n_pages,
+            return attn.PagedKV(tables=pool.tables, n_pages=pool.n_pages,
                                 write_mask=write_mask, max_seq=self.max_seq,
-                                page_size=self.page_size)
+                                page_size=self.page_size, owned=pool.owned)
         return bundle
 
     def _make_tick(self):
         """N fused decode steps: decode -> sample -> terminate, scanned;
-        under the paged layout, pages of every slot that terminates inside
-        the tick return to the free list before the host ever syncs."""
+        under the paged layout, every reference a slot that terminates
+        inside the tick holds is released before the host ever syncs —
+        pages reaching refcount zero rejoin the free set."""
         cfg, sc = self.cfg, self.sampling
         eos, max_seq, steps = self.eos_id, self.max_seq, self.decode_steps
         paged_mode = self.kv_layout == "paged"
@@ -285,7 +294,7 @@ class Engine:
                 # entries may point at pages since re-granted to another
                 # request (dense slots own their rows, so masking there is
                 # unnecessary — and the PR-4 path stays untouched)
-                pv = self._paged_kv(state)(state.active) if paged_mode \
+                pv = self._paged_kv(state.pages)(state.active) if paged_mode \
                     else None
                 logits, caches = M.decode_step(
                     params, state.last_tok[:, None], cfg, caches, state.pos,
@@ -308,9 +317,7 @@ class Engine:
                 body, (state, caches), None, length=steps)
             if paged_mode:
                 dead = pre_active & ~state.active
-                free, n_pages = _reclaim_pages(state.free, state.tables,
-                                               state.n_pages, dead)
-                state = state._replace(free=free, n_pages=n_pages)
+                state = state._replace(pages=pg.release(state.pages, dead))
             return state, caches, toks, emitted
 
         return tick
@@ -320,26 +327,47 @@ class Engine:
 
         tokens (S, C) holds each admitting slot's chunk (garbage rows for
         slots mid-decode are masked out of the cache merge); offsets are
-        the per-slot chunk starts.  Rows whose chunk completes the prompt
-        (`final`) sample their first token on device and commit the slot
-        state; the sampled tokens come back so the host can append them.
-        Under the paged layout the first chunk also carries each admitting
-        slot's page grant (`new_pages`), allocated on device from the free
-        mask before the forward runs."""
+        the per-slot chunk starts — a warm-prefix slot's first chunk
+        starts at its matched length, not 0.  Rows whose chunk completes
+        the prompt (`final`) sample their first token on device and
+        commit the slot state; the sampled tokens come back so the host
+        can append them.
+
+        Under the paged layout the first chunk of a round also carries
+        the round's whole pool transaction, applied via
+        `pages.admit_update` in the fixed evict -> share -> grant ->
+        register order the HostPool mirror replays, followed by the
+        copy-on-write split (`pages.cow_copy`) for slots whose cached
+        prefix ends mid-page.  Later chunks pass an all-False `admitting`
+        mask and zero deltas — the allocator is a no-op there."""
         cfg, sc = self.cfg, self.sampling
         eos, max_seq, ns = self.eos_id, self.max_seq, self.num_slots
         base_key = self._base_key
         paged_mode = self.kv_layout == "paged"
         pool_flags = self._pool_flags
 
-        def admit(params, state, caches, tokens, valid, offsets, true_lens,
-                  seeds, budgets0, new_pages):
+        def admit(params, state, caches, tokens, valid, first, offsets,
+                  true_lens, seeds, budgets0, admitting, shared, n_shared,
+                  new_pages, cow_src, evict_delta, register_delta):
             C = tokens.shape[1]
             if paged_mode:
-                free, tables, n_pages = _alloc_pages(
-                    state.free, state.tables, state.n_pages, new_pages)
-                state = state._replace(free=free, tables=tables,
-                                       n_pages=n_pages)
+                pool = pg.admit_update(state.pages, admitting, shared,
+                                       n_shared, new_pages, evict_delta,
+                                       register_delta)
+                state = state._replace(pages=pool)
+                # copy-on-write split: a cached prefix that ends mid-page
+                # lands as a private copy in the slot's first FRESH page
+                # (table entry n_shared — a fresh grant always exists:
+                # the matched prefix is capped at prompt_len - 1, so at
+                # least the final prompt row needs a writable page).  The
+                # copy is traced before any forward write, so it reads
+                # the source page's pre-call contents even if its chain
+                # was evicted and the page re-granted this same round.
+                mp = pool.tables.shape[1]
+                dst = jnp.take_along_axis(
+                    pool.tables, jnp.clip(n_shared, 0, mp - 1)[:, None],
+                    axis=1)[:, 0]
+                caches = pg.cow_copy(caches, pool_flags, cow_src, dst)
             # a slot's FIRST chunk starts from pristine state: recurrent
             # mixers accumulate (h/conv/C/n/m carry the previous occupant
             # forward — the seed engine's whole-prompt *_sequence prefill
@@ -348,7 +376,9 @@ class Engine:
             # tree into constants; no second cache is held).  Shared page
             # pools are exempt: co-resident requests own live rows there,
             # and stale rows only ever surface masked to exact zeros.
-            first = valid & (offsets == 0)
+            # `first` is an explicit host-built mask — warm-prefix slots
+            # start their chunk offsets at the matched length, so
+            # `offsets == 0` would miss them.
 
             def reset(cur, ini):
                 m = first.reshape((1, ns) + (1,) * (cur.ndim - 2))
@@ -356,9 +386,9 @@ class Engine:
 
             if paged_mode:
                 init_tree = M.init_cache(cfg, ns, max_seq,
-                                         num_pages=free.shape[0])
+                                         num_pages=pool.refs.shape[0])
                 caches = jax.tree_util.tree_map(
-                    lambda cur, ini, pool: cur if pool else reset(cur, ini),
+                    lambda cur, ini, pf: cur if pf else reset(cur, ini),
                     caches, init_tree, pool_flags)
             else:
                 caches = jax.tree_util.tree_map(
@@ -366,7 +396,7 @@ class Engine:
             # unembed only each slot's true last prompt row (the one whose
             # logits can be sampled), not all C chunk positions
             idx = jnp.clip(true_lens - 1 - offsets, 0, C - 1)
-            pv = self._paged_kv(state)(valid) if paged_mode else None
+            pv = self._paged_kv(state.pages)(valid) if paged_mode else None
             logits, _, new_caches = M.forward(
                 params, {"tokens": tokens}, cfg, caches=caches,
                 cache_pos=offsets, gather_pos=idx, paged=pv)
@@ -379,7 +409,7 @@ class Engine:
                 # pool leaves already masked their writes at scatter time;
                 # per-slot leaves (recurrent state, xattn) merge as before
                 caches = jax.tree_util.tree_map(
-                    lambda old, new, pool: new if pool else merge(old, new),
+                    lambda old, new, pf: new if pf else merge(old, new),
                     caches, new_caches, pool_flags)
             else:
                 caches = jax.tree_util.tree_map(merge, caches, new_caches)
@@ -399,11 +429,9 @@ class Engine:
                 rng=jnp.where(final[:, None], keys, state.rng))
             if paged_mode:
                 # a request that terminates AT admission (first token EOS,
-                # or no decode room) must give its pages back right here
+                # or no decode room) must drop its references right here
                 dead = final & ~act
-                free, n_pages = _reclaim_pages(state.free, state.tables,
-                                               state.n_pages, dead)
-                state = state._replace(free=free, n_pages=n_pages)
+                state = state._replace(pages=pg.release(state.pages, dead))
             return state, caches, toks
 
         return admit
@@ -448,6 +476,13 @@ class Engine:
                       max_new_tokens=max_new_tokens,
                       seed=uid if seed is None else int(seed),
                       t_submit=time.perf_counter())
+        if self.prefix is not None:
+            # hash every chunk-aligned prefix ONCE, here — admission only
+            # compares precomputed keys
+            pc = self.prefix_chunk
+            req.prefix_keys = tuple(
+                prompt[:end].tobytes()
+                for end in range(pc, len(prompt) + 1, pc))
         self._queue.append(req)
         return req
 
@@ -455,29 +490,86 @@ class Engine:
         ns, C = self.num_slots, self.prefill_chunk
         paged = self.kv_layout == "paged"
         admitted: list[tuple[int, Request]] = []
-        grants: dict[int, int] = {}
+        # round plan: slot -> (matched_len, shared ids, cow page, fresh)
+        plan: dict[int, tuple[int, list, int, int]] = {}
+        evict_delta: dict[int, int] = {}
+        reg_delta: dict[int, int] = {}
+        if paged:
+            # phase 1 — FIFO decisions on COUNTS only: `eff` accumulates
+            # this round's pending share bumps and eviction decrements so
+            # freeness checks see the round's true end state; actual page
+            # ids are assigned once, at the end, exactly like the device's
+            # single post-evict post-share grant pass
+            eff = self.pool.refs.copy()
+            free_cnt = int((eff == 0).sum())
         for slot in range(ns):
             if self.slot_req[slot] is not None or not self._queue:
                 continue
+            req = self._queue[0]
             if paged:
-                need = self._need_pages(len(self._queue[0].prompt),
-                                        self._queue[0].max_new_tokens)
-                if self.pages_in_use + need > self.num_pages:
-                    # pool exhausted: hold the WHOLE queue (FIFO — skipping
-                    # the head for a smaller request behind it would make
-                    # admission order depend on pool state)
+                if self.prefix is not None:
+                    m_len, full, cow = self.prefix.match(req.prefix_keys,
+                                                         len(req.prompt))
+                else:
+                    m_len, full, cow = 0, [], -1
+                need = self._need_pages(len(req.prompt), req.max_new_tokens)
+                n_fresh = need - len(full)
+                # shares first: they may resurrect a cached page whose
+                # refcount would otherwise read as free
+                for p in full:
+                    if eff[p] == 0:
+                        free_cnt -= 1
+                    eff[p] += 1
+                if n_fresh > free_cnt and self.prefix is not None:
+                    # pool dry: evict idle cached prefixes (LRU) before
+                    # stalling admission
+                    free_cnt += self.prefix.evict(n_fresh - free_cnt, eff,
+                                                  evict_delta)
+                if n_fresh > free_cnt:
+                    # still dry: roll this request's shares back and hold
+                    # the WHOLE queue (FIFO — skipping the head for a
+                    # smaller request behind it would make admission order
+                    # depend on pool state)
+                    for p in full:
+                        eff[p] -= 1
+                        if eff[p] == 0:
+                            free_cnt += 1
                     break
-                grants[slot] = need
-                self.pages_in_use += need
-                self._slot_pages[slot] = need
-            req = self._queue.pop(0)
+                free_cnt -= n_fresh
+                plan[slot] = (m_len, full, cow, n_fresh)
+            self._queue.pop(0)
             self.slot_req[slot] = req
             admitted.append((slot, req))
-        self.pages_high_water = max(self.pages_high_water, self.pages_in_use)
         if not admitted:
             return
-        n_chunks = {s: max(1, -(-len(r.prompt) // C)) for s, r in admitted}
+        if paged:
+            # phase 2 — assign page ids (mirrors the device's grant rule:
+            # lowest free id first, slots in ascending order) and register
+            # the admitted prompts' chains for future rounds.  Same-round
+            # self-matching is impossible by construction — a chain only
+            # becomes matchable after its producer's prefill ran.
+            granted = self.pool.admit_round(
+                [(s, plan[s][1], plan[s][3]) for s, _ in admitted],
+                evict_delta)
+            if self.prefix is not None:
+                for slot, req in admitted:
+                    self.prefix.register(req.prefix_keys,
+                                         plan[slot][1] + granted[slot],
+                                         reg_delta)
+                self.pool.apply_register(reg_delta)
+            self.pages_high_water = max(self.pages_high_water,
+                                        self.pool.pages_in_use)
+            self.pages_shared_high_water = max(self.pages_shared_high_water,
+                                               self.pool.pages_shared)
+        starts = {s: plan[s][0] if paged else 0 for s, _ in admitted}
+        n_chunks = {s: max(1, -(-(len(r.prompt) - starts[s]) // C))
+                    for s, r in admitted}
+        if paged:
+            for slot, req in admitted:
+                self.prefill_chunks_skipped += \
+                    max(1, -(-len(req.prompt) // C)) - n_chunks[slot]
         finals: dict[int, Any] = {}          # slot -> its final-chunk tokens
+        P = self.num_pages
         for ci in range(max(n_chunks.values())):
             tokens = np.zeros((ns, C), np.int32)
             valid = np.zeros((ns,), bool)
@@ -485,13 +577,29 @@ class Engine:
             true_lens = np.ones((ns,), np.int32)
             seeds = np.zeros((ns,), np.int32)
             budgets0 = np.zeros((ns,), np.int32)
+            admitting = np.zeros((ns,), bool)
+            shared = np.zeros((ns, self.pages_per_slot), np.int32)
+            n_shared = np.zeros((ns,), np.int32)
             new_pages = np.zeros((ns,), np.int32)
+            cow_src = np.full((ns,), -1, np.int32)
+            ev_arr = np.zeros((P,), np.int32)
+            rg_arr = np.zeros((P,), np.int32)
+            if paged and ci == 0:
+                for p, d in evict_delta.items():
+                    ev_arr[p] = d
+                for p, d in reg_delta.items():
+                    rg_arr[p] = d
             for slot, req in admitted:
                 if ci >= n_chunks[slot]:
                     continue
-                off = ci * C
-                if ci == 0 and paged:
-                    new_pages[slot] = grants[slot]
+                off = starts[slot] + ci * C
+                if paged and ci == 0:
+                    m_len, full, cow, n_fresh = plan[slot]
+                    admitting[slot] = True
+                    shared[slot, :len(full)] = full
+                    n_shared[slot] = len(full)
+                    new_pages[slot] = n_fresh
+                    cow_src[slot] = cow
                 if ci == n_chunks[slot] - 1 and not paged:
                     # dense only: a final chunk whose padded end would
                     # cross max_seq slides back inside the cache
@@ -507,11 +615,15 @@ class Engine:
                 true_lens[slot] = len(req.prompt)
                 seeds[slot] = req.seed
                 budgets0[slot] = req.max_new_tokens - 1
+            first = valid if ci == 0 else np.zeros((ns,), bool)
             self.state, self.caches, toks = self._admit_chunk(
                 self.params, self.state, self.caches, jnp.asarray(tokens),
-                jnp.asarray(valid), jnp.asarray(offsets),
+                jnp.asarray(valid), jnp.asarray(first), jnp.asarray(offsets),
                 jnp.asarray(true_lens), jnp.asarray(seeds),
-                jnp.asarray(budgets0), jnp.asarray(new_pages))
+                jnp.asarray(budgets0), jnp.asarray(admitting),
+                jnp.asarray(shared), jnp.asarray(n_shared),
+                jnp.asarray(new_pages), jnp.asarray(cow_src),
+                jnp.asarray(ev_arr), jnp.asarray(rg_arr))
             self.n_admit_calls += 1
             for slot, req in admitted:
                 if ci == n_chunks[slot] - 1:
@@ -527,14 +639,81 @@ class Engine:
             if not active[slot]:
                 self._release_slot(slot)
         self.n_syncs += 1
+        if self.check_invariants and paged:
+            self._verify_invariants()
 
     def _release_slot(self, slot: int) -> None:
         """Host-side retirement: mark the request done, free the slot and
-        mirror the device-side page reclaim in the occupancy counters."""
+        replay the device-side refcount release in the HostPool mirror."""
         self.slot_req[slot].done = True
         self.slot_req[slot] = None
-        self.pages_in_use -= self._slot_pages[slot]
-        self._slot_pages[slot] = 0
+        if self.pool is not None:
+            self.pool.release_slot(slot)
+
+    # ------------------------------------------------------------------
+    # telemetry / debug
+    # ------------------------------------------------------------------
+
+    @property
+    def pages_in_use(self) -> int:
+        """Pages with refcount > 0 — slot-held and cache-held alike."""
+        return self.pool.pages_in_use if self.pool is not None else 0
+
+    def prefix_stats(self) -> dict:
+        """Prefix-cache telemetry for reports and benches."""
+        if self.prefix is None:
+            return {"enabled": False, "hits": 0, "misses": 0,
+                    "hit_rate": 0.0, "tokens_skipped": 0, "evictions": 0,
+                    "cached_pages": 0, "chunks_skipped": 0}
+        c = self.prefix
+        looked = c.hits + c.misses
+        return {"enabled": True, "hits": c.hits, "misses": c.misses,
+                "hit_rate": c.hits / looked if looked else 0.0,
+                "tokens_skipped": c.tokens_skipped,
+                "evictions": c.evictions, "cached_pages": c.cached_pages,
+                "chunks_skipped": self.prefill_chunks_skipped}
+
+    def _verify_invariants(self) -> None:
+        """Debug-mode cross-check (`check_invariants=True`): the HostPool
+        mirror must equal the device allocator exactly — refcounts, free
+        popcount, per-slot block tables and ownership — and the global
+        refcount identity (I3 in `repro.runtime.pages`) must hold."""
+        pool = self.state.pages
+        refs = np.asarray(pool.refs)
+        if (refs < 0).any():
+            raise AssertionError(f"device refcounts negative: {refs}")
+        if not np.array_equal(refs, self.pool.refs):
+            raise AssertionError(
+                f"host/device refcount drift:\n host {self.pool.refs}\n "
+                f"device {refs}")
+        if int((refs == 0).sum()) != self.pool.free_pages:
+            raise AssertionError(
+                f"free popcount drift: host {self.pool.free_pages}, "
+                f"device {int((refs == 0).sum())}")
+        n_pages = np.asarray(pool.n_pages)
+        tables = np.asarray(pool.tables)
+        owned = np.asarray(pool.owned)
+        for s in range(self.num_slots):
+            t = self.pool.slot_tables[s]
+            if int(n_pages[s]) != len(t):
+                raise AssertionError(
+                    f"slot {s} n_pages drift: host {len(t)}, "
+                    f"device {int(n_pages[s])}")
+            if list(tables[s, :len(t)]) != t:
+                raise AssertionError(
+                    f"slot {s} table drift: host {t}, "
+                    f"device {list(tables[s, :len(t)])}")
+            if list(owned[s, :len(t)]) != self.pool.slot_owned[s]:
+                raise AssertionError(
+                    f"slot {s} ownership drift: host "
+                    f"{self.pool.slot_owned[s]}, "
+                    f"device {list(owned[s, :len(t)])}")
+        cached = self.prefix.cached_pages if self.prefix is not None else 0
+        if int(n_pages.sum()) != int(refs.sum()) - cached:
+            raise AssertionError(
+                f"refcount identity broken: sum(n_pages)="
+                f"{int(n_pages.sum())}, sum(refs)={int(refs.sum())}, "
+                f"cached={cached}")
 
     # ------------------------------------------------------------------
     def step(self) -> bool:
@@ -560,6 +739,8 @@ class Engine:
                     self.n_generated += 1
             if not active[slot]:
                 self._release_slot(slot)
+        if self.check_invariants and self.kv_layout == "paged":
+            self._verify_invariants()
         return True
 
     def run(self, max_ticks: int = 10_000) -> None:

@@ -1,0 +1,186 @@
+"""Allocator-invariant property tests for the refcounted KV page pool
+(runtime/pages.py).
+
+Random admission / share / release / eviction schedules are replayed
+against BOTH the device allocator (`admit_update` / `release` — jit'd,
+exactly as the engine calls them) and the `HostPool` mirror; after every
+step the two must agree bit for bit, and the module's documented
+invariants must hold:
+
+  I1  refcounts never negative;
+  I2  a page is free iff refcount 0 (grants draw only from refcount-0
+      pages; release-to-zero returns a page to the free set);
+  I3  sum of per-slot page counts == total live refs minus cache-held
+      references;
+  I4  grant order deterministic — lowest free page id first, admitting
+      slots in ascending slot order (re-running a schedule reproduces
+      the same tables exactly).
+
+hypothesis-optional per ROADMAP policy: `_hypothesis_compat` replays a
+deterministic example grid when the real library is absent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.runtime import pages as pg
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _run_schedule(seed: int, S: int, P: int, mp: int, steps: int):
+    """Random interleaving of admissions (with shares drawn from live
+    cached pages), releases, and cache-ref registrations/evictions,
+    applied to device + mirror in lockstep.  Returns the final pair."""
+    rng = np.random.default_rng(seed)
+    pool = pg.init_pool(S, mp, P)
+    host = pg.HostPool(P, S)
+    occupied = [False] * S
+    cached: set[int] = set()            # pages holding a +1 cache ref
+
+    for _ in range(steps):
+        free_ids = np.flatnonzero(host.refs == 0)
+        op = rng.integers(3)
+        if op == 0:
+            # admit 1..S free slots with shares from cached pages
+            slots = [s for s in range(S) if not occupied[s]]
+            rng.shuffle(slots)
+            slots = sorted(slots[:max(1, len(slots) // 2)])
+            admitting = np.zeros(S, bool)
+            shared = np.zeros((S, mp), np.int32)
+            n_shared = np.zeros(S, np.int32)
+            new_pages = np.zeros(S, np.int32)
+            grants = []
+            free_cnt = free_ids.size
+            for s in slots:
+                sh = list(rng.permutation(sorted(cached)))[
+                    :int(rng.integers(0, min(len(cached), mp - 1) + 1))]
+                fresh = int(rng.integers(1, mp - len(sh) + 1))
+                if fresh > free_cnt:
+                    break               # FIFO stall, like the engine
+                free_cnt -= fresh
+                admitting[s] = True
+                shared[s, :len(sh)] = sh
+                n_shared[s] = len(sh)
+                new_pages[s] = fresh
+                occupied[s] = True
+                grants.append((s, sh, fresh))
+            host.admit_round(grants, {})
+            pool = jax.jit(pg.admit_update)(
+                pool, jnp.asarray(admitting), jnp.asarray(shared),
+                jnp.asarray(n_shared), jnp.asarray(new_pages),
+                jnp.zeros(P, jnp.int32), jnp.zeros(P, jnp.int32))
+        elif op == 1:
+            # release every occupied slot independently with p=1/2
+            dead = np.array([occupied[s] and bool(rng.integers(2))
+                             for s in range(S)])
+            for s in np.flatnonzero(dead):
+                host.release_slot(int(s))
+                occupied[s] = False
+            pool = jax.jit(pg.release)(pool, jnp.asarray(dead))
+        else:
+            # flip cache refs: register a live uncached page, or drop one
+            delta = {}
+            live = [p for p in np.flatnonzero(host.refs > 0)
+                    if p not in cached]
+            if live and rng.integers(2):
+                p = int(live[int(rng.integers(len(live)))])
+                cached.add(p)
+                delta[p] = 1
+            elif cached:
+                p = int(sorted(cached)[int(rng.integers(len(cached)))])
+                cached.discard(p)
+                delta[p] = -1
+            if delta:
+                host.apply_register(delta)
+                arr = np.zeros(P, np.int32)
+                for p, d in delta.items():
+                    arr[p] = d
+                pool = pg.PagePool(pool.refs + jnp.asarray(arr),
+                                   pool.tables, pool.n_pages, pool.owned)
+        _check(pool, host, cached)
+    return pool, host
+
+
+def _check(pool, host, cached):
+    refs = np.asarray(pool.refs)
+    assert (refs >= 0).all(), refs                                    # I1
+    np.testing.assert_array_equal(refs, host.refs)                    # mirror
+    assert int((refs == 0).sum()) == host.free_pages                  # I2
+    n_pages = np.asarray(pool.n_pages)
+    tables = np.asarray(pool.tables)
+    owned = np.asarray(pool.owned)
+    for s in range(len(host.slot_tables)):
+        t = host.slot_tables[s]
+        assert int(n_pages[s]) == len(t)
+        assert list(tables[s, :len(t)]) == t
+        assert list(owned[s, :len(t)]) == host.slot_owned[s]
+    assert int(n_pages.sum()) == int(refs.sum()) - len(cached)        # I3
+    # at most one owner per page (I5's bookkeeping half)
+    owners = [int(tables[s, j]) for s in range(len(host.slot_tables))
+              for j in range(int(n_pages[s])) if owned[s, j]]
+    assert len(owners) == len(set(owners)), owners
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), S=st.sampled_from([1, 2, 4]),
+       P=st.sampled_from([4, 8, 16]), steps=st.sampled_from([4, 8, 12]))
+def test_allocator_invariants_random_schedules(seed, S, P, steps):
+    mp = max(2, P // max(S, 2))
+    _run_schedule(seed, S, P, mp, steps)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_grant_order_deterministic(seed):
+    """I4: replaying the same schedule yields identical block tables and
+    refcounts — grants are a pure function of pool state (lowest free id
+    first, slots ascending), with no hidden iteration-order dependence."""
+    a_pool, a_host = _run_schedule(seed, 3, 12, 4, 10)
+    b_pool, b_host = _run_schedule(seed, 3, 12, 4, 10)
+    np.testing.assert_array_equal(np.asarray(a_pool.refs),
+                                  np.asarray(b_pool.refs))
+    np.testing.assert_array_equal(np.asarray(a_pool.tables),
+                                  np.asarray(b_pool.tables))
+    assert a_host.slot_tables == b_host.slot_tables
+
+
+def test_grant_fills_lowest_free_ids_first():
+    """I4, pinned concretely: with pages {1, 4} busy, a 3-page grant to
+    slots 0 and 2 takes ids (0, 2) and (3,) in slot order."""
+    pool = pg.init_pool(3, 2, 6)
+    host = pg.HostPool(6, 3)
+    # occupy pages 1 and 4 via slot 1
+    adm = np.array([False, True, False])
+    pre = pg.admit_update(pool, jnp.asarray(adm),
+                          jnp.zeros((3, 2), jnp.int32),
+                          jnp.zeros(3, jnp.int32),
+                          jnp.asarray([0, 2, 0], np.int32),
+                          jnp.zeros(6, jnp.int32), jnp.zeros(6, jnp.int32))
+    host.admit_round([(1, [], 2)], {})
+    assert host.slot_tables[1] == [0, 1]
+    # release slot 1, then hand pages 0 and 1 a fake cache ref via
+    # registration so the NEXT grant must skip busy ids... keep page 1
+    # and 4: simpler — re-admit slot 1 with 2 pages after seeding refs
+    pre = pg.release(pre, jnp.asarray([False, True, False]))
+    host.release_slot(1)
+    seed_delta = {1: 1, 4: 1}
+    arr = np.zeros(6, np.int32)
+    for p, d in seed_delta.items():
+        arr[p] = d
+    host.apply_register(seed_delta)
+    pre = pg.PagePool(pre.refs + jnp.asarray(arr), pre.tables,
+                      pre.n_pages, pre.owned)
+    adm = np.array([True, False, True])
+    got = pg.admit_update(pre, jnp.asarray(adm),
+                          jnp.zeros((3, 2), jnp.int32),
+                          jnp.zeros(3, jnp.int32),
+                          jnp.asarray([2, 0, 1], np.int32),
+                          jnp.zeros(6, jnp.int32), jnp.zeros(6, jnp.int32))
+    host.admit_round([(0, [], 2), (2, [], 1)], {})
+    assert host.slot_tables[0] == [0, 2] and host.slot_tables[2] == [3]
+    np.testing.assert_array_equal(np.asarray(got.tables[0]), [0, 2])
+    assert int(got.tables[2, 0]) == 3
+    np.testing.assert_array_equal(np.asarray(got.refs),
+                                  host.refs)

@@ -1,0 +1,198 @@
+"""Copy-on-write prefix caching across the serving stack (runtime/pages.py
++ runtime/serve.py).
+
+The contract under test: warm-prefix admission maps cached pages into the
+admitting slot's block table read-only and skips their prefill compute —
+and NOTHING about the emitted streams may change.  Greedy streams must be
+bit-identical across {prefix cache on, off} x {paged, dense} for every
+cache architecture (gqa, mla, int8-KV, recurrent-hybrid — the last opts
+out of sharing but must still stream identically), including prompts that
+diverge from a cached prefix mid-page (the copy-on-write split).  All
+engines here run with `check_invariants=True`, so every assertion also
+re-proves the HostPool mirror == device allocator equality after each
+sync."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.runtime.serve import Engine
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = {
+    "gqa": ("granite-8b", {}),
+    "mla": ("minicpm3-4b", {}),
+    "int8kv": ("granite-8b", {"quant_kv": True}),
+    "recurrent": ("jamba-1.5-large-398b", {}),
+}
+
+
+def _setup(name):
+    arch, over = ARCHS[name]
+    cfg = get_config(arch, smoke=True)
+    if over:
+        cfg = cfg.replace(**over)
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _serve_staggered(cfg, params, prompts, news, **kw):
+    """Requests submitted in waves (producer finishes before consumers
+    arrive — same-round requests never match each other by design), so
+    later requests exercise warm admission when the cache is on."""
+    eng = Engine(cfg, params, num_slots=2, max_seq=96, **kw)
+    outs = []
+    for p, n in zip(prompts, news):
+        r = eng.submit(p, n)
+        eng.run()
+        outs.append(r.out_tokens)
+        assert r.done
+    return outs, eng
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_prefix_parity_on_off_dense(name):
+    """Identical system prompt across staggered requests: bit-identical
+    streams with cache on vs off vs the dense oracle, on every cache
+    architecture."""
+    cfg, params = _setup(name)
+    rng = np.random.default_rng(0)
+    sysp = rng.integers(0, cfg.vocab_size, size=40)     # shared 40 tokens
+    prompts = [np.concatenate([sysp, rng.integers(0, cfg.vocab_size,
+                                                  size=k)])
+               for k in (3, 7, 5)]
+    news = (5, 4, 6)
+    warm, eng = _serve_staggered(cfg, params, prompts, news,
+                                 check_invariants=True)
+    cold, _ = _serve_staggered(cfg, params, prompts, news,
+                               prefix_cache=False)
+    dense, _ = _serve_staggered(cfg, params, prompts, news,
+                                kv_layout="dense")
+    assert warm == cold == dense
+    st = eng.prefix_stats()
+    if name == "recurrent":
+        # recurrent state accumulates over every token: sharing is
+        # silently disabled, but the streams above already proved parity
+        assert not st["enabled"]
+    else:
+        # requests 2 and 3 hit the registered 40-token prefix: 2 full
+        # pages each mapped read-only, 32 tokens of prefill skipped
+        assert st["hits"] == 2 and st["tokens_skipped"] == 64
+        assert eng.pages_shared_high_water >= 2
+
+
+def test_cow_divergence_mid_page():
+    """Two requests sharing 24 tokens with prefix_chunk=8 < page_size=16:
+    the second's match ends mid-page, so its partial page arrives as a
+    private copy (copy-on-write) while the cached page is never written —
+    streams must still bit-match the cold path, and a THIRD request
+    re-matching the full first prompt proves the cached page survived the
+    second request's divergent writes."""
+    cfg, params = _setup("gqa")
+    rng = np.random.default_rng(1)
+    stem = rng.integers(0, cfg.vocab_size, size=24)
+    prompts = [np.concatenate([stem, rng.integers(0, cfg.vocab_size,
+                                                  size=8)]),
+               np.concatenate([stem[:20],
+                               rng.integers(0, cfg.vocab_size, size=9)]),
+               np.concatenate([stem, rng.integers(0, cfg.vocab_size,
+                                                  size=4)])]
+    news = (4, 5, 6)
+    warm, eng = _serve_staggered(cfg, params, prompts, news,
+                                 prefix_chunk=8, check_invariants=True)
+    cold, _ = _serve_staggered(cfg, params, prompts, news,
+                               prefix_cache=False)
+    assert warm == cold
+    st = eng.prefix_stats()
+    assert st["hits"] == 2          # request 2 (mid-page) and request 3
+    # request 2 matched 16 of its 20 stem tokens: 1 full page (0 shared
+    # full pages at page_size=16? 16//16 = 1) — and request 3 matched 24,
+    # whose last 8 rows sit mid-page: at least one COW copy happened,
+    # proven by parity + the surviving cache (invariants checked live)
+    assert st["tokens_skipped"] == 16 + 24
+
+
+def test_refcount_zero_reclaim_under_pressure():
+    """A tiny pool stays serviceable indefinitely because pages recycle
+    at refcount zero: slot releases AND LRU chain eviction both route
+    through the same refcounted release; the engine never stalls."""
+    cfg, params = _setup("gqa")
+    rng = np.random.default_rng(2)
+    eng = Engine(cfg, params, num_slots=2, max_seq=64, num_pages=4,
+                 check_invariants=True)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=20), 6)
+            for _ in range(5)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert eng.pool.slot_refs_total == 0
+    # whatever is still in use is exactly the cache's retained pages
+    assert eng.pages_in_use == eng.prefix.cached_pages
+    assert eng.pages_high_water <= 4
+
+
+def test_eviction_preferred_over_stall():
+    """Pool dry with idle cached prefixes: admission must evict them (LRU)
+    rather than stall — the big request completes and the eviction counter
+    proves the path was taken."""
+    cfg, params = _setup("gqa")
+    eng = Engine(cfg, params, num_slots=2, max_seq=64, num_pages=4,
+                 check_invariants=True)
+    a = eng.submit(list(range(1, 30)), max_new_tokens=4)    # 2 pages
+    eng.run()
+    assert a.done and eng.prefix.cached_pages >= 1          # 1 page cached
+    b = eng.submit(list(range(200, 250)), max_new_tokens=8)  # needs 4 pages
+    eng.run()
+    st = eng.prefix_stats()
+    assert b.done and st["evictions"] >= 1
+
+
+def test_high_water_strictly_below_cold_with_coresident_sharers():
+    """4 co-resident requests sharing a 32-token prefix: pages-in-use
+    high-water must be STRICTLY below 4x the cold per-request page count
+    (the shared pages are stored once, not four times)."""
+    cfg, params = _setup("gqa")
+    rng = np.random.default_rng(3)
+    sysp = rng.integers(0, cfg.vocab_size, size=32)
+    prompts = [np.concatenate([sysp, rng.integers(0, cfg.vocab_size,
+                                                  size=6)])
+               for _ in range(4)]
+    # per request: 38 prompt + 16 new - 1 = 53 rows -> 4 pages cold
+    per_req = -(-(38 + 16 - 1) // cfg.page_size)
+
+    def high_water(on):
+        eng = Engine(cfg, params, num_slots=4, max_seq=64,
+                     prefix_cache=on, check_invariants=True)
+        first = eng.submit(prompts[0], 16)      # producer registers alone
+        eng.step()
+        rest = [eng.submit(p, 16) for p in prompts[1:]]
+        eng.run()
+        assert first.done and all(r.done for r in rest)
+        streams = [first.out_tokens] + [r.out_tokens for r in rest]
+        return eng.pages_high_water, streams
+
+    hw_warm, s_warm = high_water(True)
+    hw_cold, s_cold = high_water(False)
+    assert s_warm == s_cold
+    assert hw_cold == 4 * per_req          # cold: four private copies
+    assert hw_warm < 4 * per_req           # warm: shared prefix stored once
+
+
+def test_recurrent_hybrid_streams_identical_with_cache_flag():
+    """The recurrent-hybrid arch ignores prefix_cache (state accumulates
+    over all tokens) — flipping the flag changes nothing, not even pool
+    occupancy accounting."""
+    cfg, params = _setup("recurrent")
+    rng = np.random.default_rng(4)
+    sysp = rng.integers(0, cfg.vocab_size, size=12)
+    prompts = [np.concatenate([sysp, rng.integers(0, cfg.vocab_size,
+                                                  size=4)])
+               for _ in range(2)]
+    on, eng_on = _serve_staggered(cfg, params, prompts, (3, 3),
+                                  check_invariants=True)
+    off, eng_off = _serve_staggered(cfg, params, prompts, (3, 3),
+                                    prefix_cache=False,
+                                    check_invariants=True)
+    assert on == off
+    assert eng_on.prefix is None and eng_off.prefix is None
+    assert eng_on.pages_in_use == eng_off.pages_in_use == 0

@@ -72,8 +72,11 @@ def test_greedy_parity_chunked_prefill_staggered_admissions(granite, layout):
         assert r.done
         assert r.out_tokens == ref
     if layout == "paged":
-        # everything terminated -> every page is back on the free list
-        assert eng.pages_in_use == 0
+        # everything terminated -> no slot holds a reference; the only
+        # pages still in use are the ones the (default-on) prefix cache
+        # retains for future warm admissions
+        assert eng.pool.slot_refs_total == 0
+        assert eng.pages_in_use == eng.prefix.cached_pages
         assert 0 < eng.pages_high_water <= eng.num_pages
 
 
@@ -292,7 +295,8 @@ def test_oversized_and_empty_prompts_rejected(granite, layout):
     layouts: it prefills, emits its admission token, and stops with no
     decode room."""
     cfg, params = granite
-    eng = Engine(cfg, params, num_slots=1, max_seq=32, kv_layout=layout)
+    eng = Engine(cfg, params, num_slots=1, max_seq=32, kv_layout=layout,
+                 prefix_cache=False)
     with pytest.raises(ValueError, match="prompt length"):
         eng.submit(np.arange(32, dtype=np.int32), 4)   # needs max_seq-1
     with pytest.raises(ValueError, match="prompt length"):
@@ -333,8 +337,10 @@ def test_pool_exhaustion_backpressure_and_reclaim(granite):
     # pool of 3 pages fits only ONE resident request at a time
     prompts = [rng.integers(0, cfg.vocab_size, size=20) for _ in range(4)]
     refs = [reference_greedy(cfg, params, p, 10, 64) for p in prompts]
+    # prefix_cache off: this test pins the bare allocator floor (exact
+    # high-water, reclaim to zero) without cache retention in the way
     eng = Engine(cfg, params, num_slots=4, max_seq=64, kv_layout="paged",
-                 num_pages=3)
+                 num_pages=3, prefix_cache=False)
     reqs = [eng.submit(p, 10) for p in prompts]
     eng.run()
     assert all(r.done for r in reqs)
@@ -357,8 +363,9 @@ def test_paged_pool_capacity_below_dense_reservation(granite):
                for n in (5, 9, 13, 6, 11, 8)]
     refs = [reference_greedy(cfg, params, p, 6, 64) for p in prompts]
     # dense would reserve 4 slots x 64 rows = 16 pages; give the pool 4
+    # (prefix_cache off: occupancy bounds are the point, not retention)
     eng = Engine(cfg, params, num_slots=4, max_seq=64, kv_layout="paged",
-                 num_pages=4)
+                 num_pages=4, prefix_cache=False)
     reqs = [eng.submit(p, 6) for p in prompts]
     eng.run()
     assert all(r.done for r in reqs)
