@@ -7,7 +7,8 @@
         [--sampling top_p --temperature 0.8 --top-p 0.95] \
         [--decode-steps 8] [--prefill-chunk 16] \
         [--kv-layout paged|dense] [--page-size 16] [--num-pages 12] \
-        [--prefix-cache on|off] [--prefix-chunk 16]
+        [--prefix-cache on|off] [--prefix-chunk 16] \
+        [--prefix-max-chains 4096]
 """
 from __future__ import annotations
 
@@ -80,6 +81,10 @@ def main():
     ap.add_argument("--prefix-chunk", type=int, default=0,
                     help="prefix-cache hash granularity in tokens "
                          "(0 = page_size)")
+    ap.add_argument("--prefix-max-chains", type=int, default=4096,
+                    help="prefix-registry capacity; LRU chains beyond it "
+                         "are evicted so host memory stays bounded "
+                         "(%(default)s)")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many identical 'system prompt' "
                          "tokens to every request — exercises the prefix "
@@ -112,7 +117,8 @@ def main():
                 kv_layout=args.kv_layout,
                 num_pages=args.num_pages or None,
                 prefix_cache=args.prefix_cache == "on",
-                prefix_chunk=args.prefix_chunk or None) as eng:
+                prefix_chunk=args.prefix_chunk or None,
+                prefix_max_chains=args.prefix_max_chains) as eng:
         shared = rng.integers(0, cfg.vocab_size, size=args.shared_prefix)
         reqs = [eng.submit(np.concatenate([
                     shared, rng.integers(0, cfg.vocab_size,

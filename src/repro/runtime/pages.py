@@ -12,10 +12,12 @@ Three cooperating pieces:
                  per-slot block tables, per-slot ownership bits).  All
                  traced mutation goes through `admit_update` (evict →
                  share → grant → register, in that order), `release`
-                 (refcount decrement to zero reclaims) and `cow_copy`
+                 (refcount decrement to zero reclaims), `cow_copy`
                  (the copy-on-write split: a shared page's rows are copied
                  into a freshly granted private page inside the jit'd
-                 admit, never written in place).
+                 admit, never written in place) and `apply_refs_delta`
+                 (bare registry deltas — the commit path for an eviction
+                 round that admitted no slot).
 
   HostPool     — the host-side mirror.  It replays the exact device rules
                  (including the grant order) from the same inputs, so the
@@ -24,13 +26,16 @@ Three cooperating pieces:
                  `Engine(check_invariants=True)` compares the two after
                  every sync point.
 
-  PrefixCache  — the host-side prefix registry: cumulative-hash chains of
-                 fixed `prefix_chunk`-token prompt prefixes mapped to the
-                 pool pages that hold their KV rows.  Matching is exact
-                 (keys are the token bytes — no hash collisions), chains
-                 hold ONE device reference per distinct page however many
-                 chains cover it, and LRU chains are evicted when
-                 admission would otherwise stall on a dry pool.
+  PrefixCache  — the host-side prefix registry: incremental-hash chains
+                 of fixed `prefix_chunk`-token prompt prefixes mapped to
+                 the pool pages that hold their KV rows.  Keys are
+                 chunk-incremental blake2b digests (fixed bytes per chunk
+                 instead of O(len^2) raw token bytes), chains hold ONE
+                 device reference per distinct page however many chains
+                 cover it, and LRU chains are evicted when admission
+                 would otherwise stall on a dry pool OR when the registry
+                 grows past `max_chains` (host memory stays bounded under
+                 high-cardinality traffic).
 
 Invariants (property-tested in tests/test_page_allocator_properties.py):
 
@@ -51,6 +56,7 @@ Invariants (property-tested in tests/test_page_allocator_properties.py):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -131,6 +137,14 @@ def admit_update(pool: PagePool, admitting, shared, n_shared, new_pages,
     return PagePool(refs + register_delta, tables, n_pages, owned)
 
 
+def apply_refs_delta(pool: PagePool, delta) -> PagePool:
+    """Bare refcount delta ((P,) i32) with no table changes — the device
+    commit for an eviction round that ended up admitting no slot: the
+    host registry already dropped its chains, so the -1 cache refs must
+    land here too or the evicted pages leak as phantom-occupied."""
+    return pool._replace(refs=pool.refs + delta)
+
+
 def release(pool: PagePool, dead) -> PagePool:
     """Drop every reference `dead` slots hold (shared and owned alike);
     a page whose refcount hits 0 is thereby free (I2) — cached pages keep
@@ -202,7 +216,10 @@ class HostPool:
         """hist[r] = number of pages with refcount exactly r."""
         return np.bincount(self.refs, minlength=1)
 
-    def _apply(self, delta: dict[int, int]) -> None:
+    def apply_delta(self, delta: dict[int, int]) -> None:
+        """Apply a bare registry refcount delta (eviction decrements /
+        registration increments) with no table changes — also the commit
+        path for an eviction round that ends up admitting no slot."""
         for p, d in delta.items():
             self.refs[p] += d
             assert self.refs[p] >= 0, f"refcount of page {p} went negative"
@@ -211,7 +228,7 @@ class HostPool:
         """grants: [(slot, shared_ids, n_fresh)] in ascending slot order.
         Returns {slot: granted page ids}.  register_delta, when known at
         call time, may also be applied later via `apply_register`."""
-        self._apply(evict_delta)
+        self.apply_delta(evict_delta)
         for _, shared_ids, _ in grants:
             for p in shared_ids:
                 self.refs[p] += 1
@@ -231,11 +248,11 @@ class HostPool:
                 + [True] * n_fresh
             granted[slot] = ids
         if register_delta:
-            self._apply(register_delta)
+            self.apply_delta(register_delta)
         return granted
 
     def apply_register(self, register_delta: dict[int, int]) -> None:
-        self._apply(register_delta)
+        self.apply_delta(register_delta)
 
     def release_slot(self, slot: int) -> None:
         for p in self.slot_tables[slot]:
@@ -257,19 +274,25 @@ class _Chain:
 
 
 class PrefixCache:
-    """Exact-match registry of prefill prefixes at `prefix_chunk`-token
-    granularity.  A chain for `end` tokens maps the ceil(end/page_size)
-    pages holding those rows; the last page may be partial (end not
-    page-aligned), in which case consumers receive it via copy-on-write
-    rather than a read-only mapping.  Each distinct page carries ONE
-    device/host refcount for the cache however many chains cover it."""
+    """Registry of prefill prefixes at `prefix_chunk`-token granularity.
+    A chain for `end` tokens maps the ceil(end/page_size) pages holding
+    those rows; the last page may be partial (end not page-aligned), in
+    which case consumers receive it via copy-on-write rather than a
+    read-only mapping.  Each distinct page carries ONE device/host
+    refcount for the cache however many chains cover it.  The registry is
+    bounded: beyond `max_chains` chains, registration evicts LRU chains
+    so host memory stays finite under high-cardinality traffic."""
 
-    def __init__(self, prefix_chunk: int, page_size: int):
+    def __init__(self, prefix_chunk: int, page_size: int,
+                 max_chains: int = 4096):
         if prefix_chunk < 1:
             raise ValueError(f"prefix_chunk must be >= 1, "
                              f"got {prefix_chunk}")
+        if max_chains < 1:
+            raise ValueError(f"max_chains must be >= 1, got {max_chains}")
         self.prefix_chunk = prefix_chunk
         self.page_size = page_size
+        self.max_chains = max_chains
         self.chains: dict[bytes, _Chain] = {}
         self.page_chains: dict[int, int] = {}     # page -> covering chains
         self._clock = 0
@@ -286,6 +309,19 @@ class PrefixCache:
         self._clock += 1
         return self._clock
 
+    def keys_for(self, prompt: np.ndarray) -> tuple[bytes, ...]:
+        """Chunk-incremental blake2b digests: keys[i] identifies tokens
+        [0, (i+1)*prefix_chunk).  One running hash walks the prompt once,
+        so a prompt costs O(len/prefix_chunk) fixed-size keys instead of
+        the O(len^2/prefix_chunk) bytes raw-token keys would take."""
+        pc = self.prefix_chunk
+        h = hashlib.blake2b(digest_size=16)
+        keys = []
+        for end in range(pc, len(prompt) + 1, pc):
+            h.update(prompt[end - pc:end].tobytes())
+            keys.append(h.digest())
+        return tuple(keys)
+
     def match(self, keys, prompt_len: int):
         """Longest registered chain among `keys` — the prompt's precomputed
         chunk-prefix hashes (keys[i] covers (i+1)*prefix_chunk tokens) —
@@ -293,25 +329,41 @@ class PrefixCache:
         final prompt token must always be computed since its logits seed
         the first sampled token.
 
-        Returns (matched_tokens, full_page_ids, cow_src): full pages are
-        mapped read-only; cow_src (or -1) is the partial page whose rows
-        the admitting slot must receive as a private copy."""
-        best = None
+        Pure planning — no stats, no LRU tick: a queue head that fails
+        admission (backpressure) re-plans every round, and only `commit`
+        (called once, when the request actually admits) records telemetry.
+
+        Returns (matched_tokens, full_page_ids, cow_src, key): full pages
+        are mapped read-only; cow_src (or -1) is the partial page whose
+        rows the admitting slot must receive as a private copy; key (or
+        None) is the matched chain's key, to pass to `commit`."""
+        best, best_key = None, None
         for i, key in enumerate(keys):
             if (i + 1) * self.prefix_chunk >= prompt_len:
                 break
             c = self.chains.get(key)
             if c is not None and (best is None or c.end > best.end):
-                best = c
+                best, best_key = c, key
         if best is None:
-            self.misses += 1
-            return 0, [], -1
-        self.hits += 1
-        self.tokens_skipped += best.end
-        best.last_use = self._tick()
+            return 0, [], -1, None
         n_full = best.end // self.page_size
         cow = int(best.pages[n_full]) if best.end % self.page_size else -1
-        return best.end, list(best.pages[:n_full]), cow
+        return best.end, list(best.pages[:n_full]), cow, best_key
+
+    def commit(self, key: bytes | None, matched: int) -> None:
+        """Record a planned `match`'s telemetry and LRU tick once its
+        request actually admitted.  The chain may already be gone — the
+        same round's eviction pass can pop it after the match (its pages
+        stay alive through the admitting slot's share refs) — so the tick
+        is best-effort while the counters always land."""
+        if key is None:
+            self.misses += 1
+            return
+        self.hits += 1
+        self.tokens_skipped += matched
+        c = self.chains.get(key)
+        if c is not None:
+            c.last_use = self._tick()
 
     def register(self, keys, table_ids, delta) -> None:
         """Add chains for every chunk-aligned prefix of a just-prefilled
@@ -332,6 +384,30 @@ class PrefixCache:
                 self.page_chains[p] = n + 1
                 if n == 0:
                     delta[p] = delta.get(p, 0) + 1
+        # capacity cap: LRU chains beyond max_chains are evicted into the
+        # SAME delta, so their cache-ref drops ride the round's register
+        # update (host and device stay in lockstep)
+        while len(self.chains) > self.max_chains:
+            key = min(self.chains, key=lambda k: self.chains[k].last_use)
+            self._evict_chain(key, delta)
+
+    def _evict_chain(self, key: bytes, delta, eff=None) -> int:
+        """Drop one chain; pages losing their last covering chain get -1
+        in `delta` (and in `eff` when given).  Returns how many pages
+        thereby became free as judged against `eff` (0 without one)."""
+        c = self.chains.pop(key)
+        self.evictions += 1
+        freed = 0
+        for p in c.pages:
+            self.page_chains[p] -= 1
+            if self.page_chains[p] == 0:
+                del self.page_chains[p]
+                delta[p] = delta.get(p, 0) - 1
+                if eff is not None:
+                    eff[p] -= 1
+                    if eff[p] == 0:
+                        freed += 1
+        return freed
 
     def evict(self, need_free: int, eff: np.ndarray, delta) -> int:
         """Evict LRU chains until `need_free` additional pages would be
@@ -342,14 +418,5 @@ class PrefixCache:
         freed = 0
         while freed < need_free and self.chains:
             key = min(self.chains, key=lambda k: self.chains[k].last_use)
-            c = self.chains.pop(key)
-            self.evictions += 1
-            for p in c.pages:
-                self.page_chains[p] -= 1
-                if self.page_chains[p] == 0:
-                    del self.page_chains[p]
-                    delta[p] = delta.get(p, 0) - 1
-                    eff[p] -= 1
-                    if eff[p] == 0:
-                        freed += 1
+            freed += self._evict_chain(key, delta, eff)
         return freed

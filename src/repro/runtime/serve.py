@@ -142,6 +142,9 @@ class Engine:
       prefix_chunk  — prefix hash granularity in tokens (default
                       cfg.page_size; smaller values trade more
                       copy-on-write splits for finer matching)
+      prefix_max_chains — registry capacity: LRU chains beyond this are
+                      evicted at registration time, bounding host memory
+                      under high-cardinality traffic (default 4096)
       check_invariants — verify the HostPool mirror against the device
                       allocator (refcounts, free popcount, block tables)
                       after every sync; debug aid, costs extra transfers
@@ -158,6 +161,7 @@ class Engine:
                  num_pages: int | None = None,
                  prefix_cache: bool = True,
                  prefix_chunk: int | None = None,
+                 prefix_max_chains: int = 4096,
                  check_invariants: bool = False):
         # mesh may be a jax Mesh or a composed-mesh spec ("model=4",
         # "data=2,model=4", "2x4", 4, ...) resolved by sharding.build_mesh.
@@ -233,7 +237,8 @@ class Engine:
         self.prefix_chunk = int(prefix_chunk) if prefix_chunk is not None \
             else self.page_size
         enabled = prefix_cache and kv_layout == "paged" and not recurrent
-        self.prefix = pg.PrefixCache(self.prefix_chunk, self.page_size) \
+        self.prefix = pg.PrefixCache(self.prefix_chunk, self.page_size,
+                                     max_chains=prefix_max_chains) \
             if enabled else None
         self.state = SlotState(
             last_tok=jnp.zeros((num_slots,), jnp.int32),
@@ -479,10 +484,7 @@ class Engine:
         if self.prefix is not None:
             # hash every chunk-aligned prefix ONCE, here — admission only
             # compares precomputed keys
-            pc = self.prefix_chunk
-            req.prefix_keys = tuple(
-                prompt[:end].tobytes()
-                for end in range(pc, len(prompt) + 1, pc))
+            req.prefix_keys = self.prefix.keys_for(prompt)
         self._queue.append(req)
         return req
 
@@ -508,10 +510,14 @@ class Engine:
             req = self._queue[0]
             if paged:
                 if self.prefix is not None:
-                    m_len, full, cow = self.prefix.match(req.prefix_keys,
-                                                         len(req.prompt))
+                    # pure planning — hit/miss telemetry and the LRU tick
+                    # are committed below, only once admission succeeds (a
+                    # backpressured head re-plans every round and must not
+                    # re-count)
+                    m_len, full, cow, mkey = self.prefix.match(
+                        req.prefix_keys, len(req.prompt))
                 else:
-                    m_len, full, cow = 0, [], -1
+                    m_len, full, cow, mkey = 0, [], -1, None
                 need = self._need_pages(len(req.prompt), req.max_new_tokens)
                 n_fresh = need - len(full)
                 # shares first: they may resurrect a cached page whose
@@ -537,10 +543,27 @@ class Engine:
                     break
                 free_cnt -= n_fresh
                 plan[slot] = (m_len, full, cow, n_fresh)
+                if self.prefix is not None:
+                    self.prefix.commit(mkey, m_len)
             self._queue.pop(0)
             self.slot_req[slot] = req
             admitted.append((slot, req))
         if not admitted:
+            if paged and evict_delta:
+                # eviction already dropped chains from the registry; its
+                # refcount decrements must land even though the round
+                # admits nothing, or the evicted pages' cache refs leak
+                # forever (pool reads as occupied, admission wedges, and
+                # the I3 identity breaks)
+                self.pool.apply_delta(evict_delta)
+                ev = np.zeros((self.num_pages,), np.int32)
+                for p, d in evict_delta.items():
+                    ev[p] = d
+                self.state = self.state._replace(
+                    pages=pg.apply_refs_delta(self.state.pages,
+                                              jnp.asarray(ev)))
+                if self.check_invariants:
+                    self._verify_invariants()
             return
         if paged:
             # phase 2 — assign page ids (mirrors the device's grant rule:

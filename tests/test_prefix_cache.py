@@ -147,6 +147,58 @@ def test_eviction_preferred_over_stall():
     assert b.done and st["evictions"] >= 1
 
 
+def test_failed_admission_eviction_does_not_leak():
+    """An eviction round that still admits nothing (pool mostly held by a
+    live request) must COMMIT its refcount decrements anyway: regression
+    for the round-rollback bug where the registry dropped its chains but
+    the -1 cache refs were discarded with the round — pages leaked as
+    phantom-occupied forever, the queued request could never admit, and
+    the I3 identity broke on the next sync."""
+    cfg, params = _setup("gqa")
+    rng = np.random.default_rng(5)
+    eng = Engine(cfg, params, num_slots=2, max_seq=64, num_pages=6,
+                 check_invariants=True)
+    # a: long-lived, holds 3 of the 6 pages while the drama unfolds
+    a = eng.submit(rng.integers(0, cfg.vocab_size, size=20), 25)
+    # c: finishes fast, leaving cached chains (idle cache refs) behind
+    c = eng.submit(rng.integers(0, cfg.vocab_size, size=17), 2)
+    while not c.done:
+        eng.step()
+    assert not a.done and eng.prefix.cached_pages >= 1
+    # b: no prefix match, needs 4 fresh pages; eviction frees the idle
+    # cached pages but a's 3 still block admission -> round admits nothing
+    b = eng.submit(rng.integers(0, cfg.vocab_size, size=50), 8)
+    eng.step()          # invariants re-verified after the failed round
+    assert eng.prefix.evictions >= 1 and not b.done
+    eng.run()           # a drains, freeing its pages -> b must admit
+    assert a.done and b.done
+    assert eng.pool.slot_refs_total == 0
+    assert eng.pages_in_use == eng.prefix.cached_pages
+    # stats are committed per ADMISSION, not per planning retry: a, c and
+    # b each count one miss however many rounds b waited in the queue
+    assert eng.prefix.misses == 3 and eng.prefix.hits == 0
+
+
+def test_registry_capacity_cap():
+    """`prefix_max_chains` bounds the registry under high-cardinality
+    traffic: registration evicts LRU chains past the cap (host memory
+    stays finite without pool pressure), cache refs stay in lockstep with
+    the device (invariants live), and serving is unaffected."""
+    cfg, params = _setup("gqa")
+    rng = np.random.default_rng(6)
+    eng = Engine(cfg, params, num_slots=2, max_seq=64,
+                 prefix_max_chains=2, check_invariants=True)
+    # 6 distinct 36-token prompts register 2 chains each (chunk=16)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=36), 4)
+            for _ in range(6)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert len(eng.prefix.chains) <= 2
+    assert eng.prefix.evictions >= 1
+    assert eng.pool.slot_refs_total == 0
+    assert eng.pages_in_use == eng.prefix.cached_pages
+
+
 def test_high_water_strictly_below_cold_with_coresident_sharers():
     """4 co-resident requests sharing a 32-token prefix: pages-in-use
     high-water must be STRICTLY below 4x the cold per-request page count
