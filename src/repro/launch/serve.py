@@ -8,11 +8,19 @@
         [--decode-steps 8] [--prefill-chunk 16] \
         [--kv-layout paged|dense] [--page-size 16] [--num-pages 12] \
         [--prefix-cache on|off] [--prefix-chunk 16] \
-        [--prefix-max-chains 4096]
+        [--prefix-max-chains 4096] \
+        [--draft-len 4 --spec-ngram 2 --spec-table 512]
+
+All engine knobs funnel into ONE `EngineOptions` bundle
+(repro.runtime.options) — the launcher is the reference construction of
+the sectioned options surface, and the finish-reason / speculation
+summaries below come from the structured `RequestResult`s `Engine.run`
+returns.
 """
 from __future__ import annotations
 
 import argparse
+import collections
 import time
 
 import jax
@@ -22,6 +30,11 @@ from repro.configs import get_config
 from repro.core.bramac_linear import QuantConfig
 from repro.models import model as M
 from repro.parallel import sharding as shd
+from repro.runtime.options import (DebugOptions, EngineOptions,
+                                   PagingOptions, ParallelOptions,
+                                   PrefixOptions, ScheduleOptions,
+                                   SpeculationOptions)
+from repro.runtime.sampling import SamplingConfig
 from repro.runtime.serve import Engine
 
 
@@ -89,6 +102,18 @@ def main():
                     help="prepend this many identical 'system prompt' "
                          "tokens to every request — exercises the prefix "
                          "cache")
+    ap.add_argument("--draft-len", type=int, default=0,
+                    help="self-speculative draft window per decode step "
+                         "(0 = off); greedy streams are bit-identical "
+                         "either way, accepted drafts just land several "
+                         "tokens per verify pass")
+    ap.add_argument("--spec-ngram", type=int, default=2,
+                    help="n-gram order of the speculation drafter")
+    ap.add_argument("--spec-table", type=int, default=512,
+                    help="per-slot drafter table buckets")
+    ap.add_argument("--check-invariants", action="store_true",
+                    help="cross-check the host page-pool mirror against "
+                         "the device allocator after every sync")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -105,20 +130,31 @@ def main():
             mesh = shd.build_mesh(args.shard)
         except ValueError as e:
             raise SystemExit(f"--shard {args.shard!r}: {e}")
+    options = EngineOptions(
+        sampling=SamplingConfig(method=args.sampling,
+                                temperature=args.temperature,
+                                top_k=args.top_k, top_p=args.top_p),
+        schedule=ScheduleOptions(num_slots=args.slots, max_seq=args.max_seq,
+                                 decode_steps=args.decode_steps,
+                                 prefill_chunk=args.prefill_chunk,
+                                 seed=args.seed),
+        paging=PagingOptions(kv_layout=args.kv_layout,
+                             num_pages=args.num_pages or None),
+        prefix=PrefixOptions(enabled=args.prefix_cache == "on",
+                             chunk=args.prefix_chunk or None,
+                             max_chains=args.prefix_max_chains),
+        speculation=SpeculationOptions(draft_len=args.draft_len,
+                                       ngram=args.spec_ngram,
+                                       table=args.spec_table),
+        parallel=ParallelOptions(mesh=mesh,
+                                 capacity_factor=args.capacity_factor
+                                 or None,
+                                 dispatch=args.dispatch or None),
+        debug=DebugOptions(check_invariants=args.check_invariants))
     rng = np.random.default_rng(0)
     # the context manager releases the process-global sharding ctx even if
     # serving raises mid-run
-    with Engine(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
-                mesh=mesh, capacity_factor=args.capacity_factor or None,
-                dispatch=args.dispatch or None, sampling=args.sampling,
-                temperature=args.temperature, top_k=args.top_k,
-                top_p=args.top_p, decode_steps=args.decode_steps,
-                prefill_chunk=args.prefill_chunk, seed=args.seed,
-                kv_layout=args.kv_layout,
-                num_pages=args.num_pages or None,
-                prefix_cache=args.prefix_cache == "on",
-                prefix_chunk=args.prefix_chunk or None,
-                prefix_max_chains=args.prefix_max_chains) as eng:
+    with Engine(cfg, params, options=options) as eng:
         shared = rng.integers(0, cfg.vocab_size, size=args.shared_prefix)
         reqs = [eng.submit(np.concatenate([
                     shared, rng.integers(0, cfg.vocab_size,
@@ -126,11 +162,12 @@ def main():
                            args.new_tokens)
                 for _ in range(args.requests)]
         t0 = time.perf_counter()    # Request.t_first is perf_counter-based
-        eng.run()
+        results = eng.run()
         dt = time.perf_counter() - t0
         done = sum(r.done for r in reqs)
-        toks = sum(len(r.out_tokens) for r in reqs)
-        ttft = [r.t_first - t0 for r in reqs if r.t_first]
+        toks = sum(len(r.tokens) for r in results)
+        ttft = [r.ttft for r in results if r.ttft is not None]
+        reasons = collections.Counter(r.finish_reason for r in results)
         print(f"{done}/{len(reqs)} requests done, {toks} tokens in {dt:.1f}s "
               f"({toks / dt:.1f} tok/s, quant="
               f"{'int%d' % args.quant_bits if args.quant_bits else 'off'}, "
@@ -138,7 +175,20 @@ def main():
         print(f"  {eng.n_syncs} host syncs for {eng.n_generated} tokens "
               f"({eng.n_syncs / max(eng.n_generated, 1):.2f} syncs/tok at "
               f"decode_steps={args.decode_steps}); mean ttft "
-              f"{1e3 * float(np.mean(ttft)) if ttft else 0.0:.0f}ms")
+              f"{1e3 * float(np.mean(ttft)) if ttft else 0.0:.0f}ms; "
+              f"finish reasons "
+              f"{{{', '.join(f'{k}: {v}' for k, v in sorted(reasons.items()))}}}")
+        st = eng.spec_stats()
+        if args.draft_len:
+            if st["enabled"]:
+                print(f"  speculation: draft_len={st['draft_len']}, "
+                      f"{st['accepted']}/{st['drafted']} drafts accepted "
+                      f"({100 * st['acceptance_rate']:.0f}%), "
+                      f"{eng.n_generated / max(eng.n_ticks, 1):.2f} "
+                      f"tokens/tick")
+            else:
+                print("  speculation: requested but this arch opts out "
+                      "(recurrent / cross-attention / MoE)")
         if eng.kv_layout == "paged":
             dense_rows = eng.num_slots * eng.max_seq
             hw_rows = eng.pages_high_water * eng.page_size

@@ -58,6 +58,12 @@ class PagedKV:
                are dropped, so a slot can never corrupt a page other
                consumers read.  None (dense-era callers) means every
                allocated entry is writable.
+    bound      (B,) i32 or None — per-sequence accepted-length bound for
+               speculative decoding: writes at positions >= bound are
+               dropped.  The engine sets bound = pos + budget so a draft
+               window can never write rows a non-speculative run could
+               not reach (and `pages.rollback` honours the same bound).
+               None means no extra bound (the non-speculative paths).
     """
     tables: jax.Array
     n_pages: jax.Array
@@ -65,13 +71,41 @@ class PagedKV:
     max_seq: int
     page_size: int
     owned: jax.Array | None = None
+    bound: jax.Array | None = None
+
+
+@dataclasses.dataclass
+class DenseKV:
+    """Write discipline for the dense layout when rows are scattered at
+    arbitrary per-row positions (the speculative verify chunk) instead of
+    one contiguous dynamic_update_slice.  dynamic_update_slice CLAMPS a
+    start index that would overflow — a draft window near max_seq would
+    silently slide back and scramble earlier valid rows — so speculative
+    dense writes go through a per-position scatter that *drops*
+    out-of-range rows instead, mirroring `paged_update`'s masking
+    (write_mask gates whole sequences; `bound` is the same per-sequence
+    accepted-length bound PagedKV carries)."""
+    write_mask: jax.Array                       # (B,) bool
+    max_seq: int
+    bound: jax.Array | None = None              # (B,) i32
+
+
+def dense_update(cache, new, positions, dv: DenseKV):
+    """Scatter `new` (B, S, …) rows into the dense cache (B, max_seq, …)
+    at absolute `positions` (B, S); masked / out-of-range rows drop."""
+    ok = dv.write_mask[:, None] & (positions < dv.max_seq)
+    if dv.bound is not None:
+        ok &= positions < dv.bound[:, None]
+    pos = jnp.where(ok, positions, dv.max_seq)  # max_seq is OOB -> dropped
+    rows = jnp.arange(positions.shape[0])[:, None]
+    return cache.at[rows, pos].set(new.astype(cache.dtype), mode="drop")
 
 
 def paged_update(pool, new, positions, pv: PagedKV):
     """Scatter `new` (B, S, …) rows at absolute `positions` (B, S) through
     the block table into `pool` ((P, page_size, …)).  Masked / out-of-range
-    rows — and rows aimed at a shared (un-owned) page — are routed to page
-    id P and dropped."""
+    rows — and rows aimed at a shared (un-owned) page or past the
+    speculative bound — are routed to page id P and dropped."""
     P, ps = pool.shape[0], pv.page_size
     pg_idx = positions // ps
     ok = pv.write_mask[:, None] & (pg_idx < pv.n_pages[:, None]) \
@@ -79,6 +113,8 @@ def paged_update(pool, new, positions, pv: PagedKV):
     if pv.owned is not None:
         ok &= jnp.take_along_axis(
             pv.owned, jnp.clip(pg_idx, 0, pv.tables.shape[1] - 1), axis=1)
+    if pv.bound is not None:
+        ok &= positions < pv.bound[:, None]
     pg = jnp.take_along_axis(
         pv.tables, jnp.clip(pg_idx, 0, pv.tables.shape[1] - 1), axis=1)
     pg = jnp.where(ok, pg, P)                       # OOB page id -> dropped
@@ -196,9 +232,15 @@ def gqa(p, x, cfg, positions, cache=None, cache_pos=None, paged=None):
         # decode and prefill chunks both attend the stored int8 rows
         # (earlier chunks only exist quantized) via the same masked path
         new_cache = _update_cache_q(cache, k, v, cache_pos, paged, positions)
-        view = new_cache if paged is None else \
+        view = new_cache if not isinstance(paged, PagedKV) else \
             {key: paged_view(new_cache[key], paged) for key in new_cache}
         out = decode_attention_q(q, view, positions)
+    elif isinstance(paged, DenseKV):
+        # speculative dense writes: per-position scatter with drop
+        kc = dense_update(cache["k"], k, positions, paged)
+        vc = dense_update(cache["v"], v, positions, paged)
+        out = chunk_attention(q, kc, vc, positions)
+        new_cache = {"k": kc, "v": vc}
     elif paged is not None:
         kc = paged_update(cache["k"], k, positions, paged)
         vc = paged_update(cache["v"], v, positions, paged)
@@ -263,6 +305,11 @@ def _quant_rows(x):
 def _update_cache_q(cache, k, v, pos, paged=None, positions=None):
     kq, ks = _quant_rows(k)
     vq, vs = _quant_rows(v)
+    if isinstance(paged, DenseKV):
+        return {"k": dense_update(cache["k"], kq, positions, paged),
+                "ks": dense_update(cache["ks"], ks, positions, paged),
+                "v": dense_update(cache["v"], vq, positions, paged),
+                "vs": dense_update(cache["vs"], vs, positions, paged)}
     if paged is not None:
         return {"k": paged_update(cache["k"], kq, positions, paged),
                 "ks": paged_update(cache["ks"], ks, positions, paged),
@@ -348,7 +395,14 @@ def mla(p, x, cfg, positions, cache=None, cache_pos=None, paged=None):
     k_rope = apply_rope(dense(x, p["w_kr"], cfg.quant)[:, :, None, :],
                         positions, cfg.rope_theta)[:, :, 0]   # (B,S,rope)
 
-    if cache is not None and paged is not None:
+    if cache is not None and isinstance(paged, DenseKV):
+        new_cache = {"c_kv": dense_update(cache["c_kv"], c_kv,
+                                          positions, paged),
+                     "k_rope": dense_update(cache["k_rope"], k_rope,
+                                            positions, paged)}
+        c_kv, k_rope = new_cache["c_kv"], new_cache["k_rope"]
+        Sk = c_kv.shape[1]
+    elif cache is not None and paged is not None:
         new_cache = {"c_kv": paged_update(cache["c_kv"], c_kv,
                                           positions, paged),
                      "k_rope": paged_update(cache["k_rope"], k_rope,

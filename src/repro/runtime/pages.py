@@ -52,6 +52,13 @@ Invariants (property-tested in tests/test_page_allocator_properties.py):
       never written: attention's paged scatter drops rows aimed at a page
       the writing slot does not own, and divergence inside a shared page
       is resolved by `cow_copy` into a fresh owned page at admission.
+  I6  speculative rows never outlive their rejection: a draft window's
+      KV writes land only inside the writing slot's owned pages below
+      its accepted-length bound (pos + budget — rows a non-speculative
+      run could reach), and `rollback` zeroes the rows past the accepted
+      position through the same write-mask/ownership/bound discipline
+      before the tick's host sync — so the pool a speculative engine
+      holds matches what the sequential engine would have written.
 """
 from __future__ import annotations
 
@@ -176,6 +183,36 @@ def cow_copy(caches, pool_flags, src, dst):
         return leaf.at[:, jnp.where(ok, dst, P)].set(rows, mode="drop")
 
     return jax.tree_util.tree_map(cp, caches, pool_flags)
+
+
+def rollback(caches, pool_flags, pv, positions):
+    """Zero speculative KV rows the verify pass rejected (I6), inside the
+    jit'd tick.  `positions` (S, L) holds the rejected rows' absolute
+    positions per slot (the caller routes kept rows to pv.max_seq, which
+    drops); `pv` is the attention.PagedKV bundle the window was WRITTEN
+    with, so the rollback honours the identical write-mask / ownership /
+    bound discipline — it can never touch a shared page, another slot's
+    rows, or a row the original write already dropped."""
+    ps = pv.page_size
+    mp = pv.tables.shape[1]
+    pg_idx = positions // ps
+    ok = pv.write_mask[:, None] & (pg_idx < pv.n_pages[:, None]) \
+        & (positions < pv.max_seq)
+    if pv.owned is not None:
+        ok &= jnp.take_along_axis(pv.owned, jnp.clip(pg_idx, 0, mp - 1),
+                                  axis=1)
+    if pv.bound is not None:
+        ok &= positions < pv.bound[:, None]
+    pid = jnp.take_along_axis(pv.tables, jnp.clip(pg_idx, 0, mp - 1), axis=1)
+
+    def zero(leaf, is_pool):
+        if not is_pool:
+            return leaf
+        P = leaf.shape[1]                  # leaf: (n_periods, P, ps, ...)
+        return leaf.at[:, jnp.where(ok, pid, P), positions % ps].set(
+            0, mode="drop")
+
+    return jax.tree_util.tree_map(zero, caches, pool_flags)
 
 
 # ---------------------------------------------------------------------------

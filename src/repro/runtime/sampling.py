@@ -53,15 +53,10 @@ def request_keys(base_key, seeds):
     return jax.vmap(lambda s: jax.random.fold_in(base_key, s))(seeds)
 
 
-def sample(logits, keys, sc: SamplingConfig):
-    """logits (B, V), keys (B, 2) u32 -> (tokens (B,) i32, new_keys).
-
-    Stochastic methods split each row's key once per emitted token;
-    greedy returns the keys untouched."""
-    if sc.method == "greedy":
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
-    pairs = jax.vmap(jax.random.split)(keys)            # (B, 2, 2)
-    new_keys, subs = pairs[:, 0], pairs[:, 1]
+def _filter_logits(logits, sc: SamplingConfig):
+    """Temperature scaling + top_k / top_p restriction of (B, V) rows;
+    the f32 result is what the stochastic methods sample from (and what
+    the speculative accept rule scores drafts against)."""
     l = logits.astype(jnp.float32) / sc.temperature
     if sc.method == "top_k":
         k = min(sc.top_k, l.shape[-1])
@@ -80,5 +75,79 @@ def sample(logits, keys, sc: SamplingConfig):
         keep = before < sc.top_p                        # best always kept
         thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1)
         l = jnp.where(l >= thresh[:, None], l, -jnp.inf)
+    return l
+
+
+def sample(logits, keys, sc: SamplingConfig):
+    """logits (B, V), keys (B, 2) u32 -> (tokens (B,) i32, new_keys).
+
+    Stochastic methods split each row's key once per emitted token;
+    greedy returns the keys untouched."""
+    if sc.method == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), keys
+    pairs = jax.vmap(jax.random.split)(keys)            # (B, 2, 2)
+    new_keys, subs = pairs[:, 0], pairs[:, 1]
+    l = _filter_logits(logits, sc)
     toks = jax.vmap(jax.random.categorical)(subs, l)
     return toks.astype(jnp.int32), new_keys
+
+
+def spec_verify(logits, drafts, keys, sc: SamplingConfig):
+    """Vectorized accept/replace for one speculative draft window.
+
+    logits (B, L, V) scored over the chunk [last_tok, g_1 .. g_d]
+    (L = d + 1, so logits[:, i] conditions on the first i drafts);
+    drafts (B, d) the proposed tokens; keys (B, 2) u32 per-slot chains.
+
+    Returns (out (B, L) i32, n_acc (B,) i32, new_keys) where out[:, i]
+    is the token the stream emits at window index i if it reaches that
+    far: accepted drafts verbatim for i < n_acc, the model's own
+    replacement at i == n_acc (the rejection correction for i < d, the
+    bonus token at i == d).  The caller clamps how many of these are
+    actually emitted (stop tokens / budget / max_seq).
+
+    Greedy: a draft is accepted iff it equals the argmax of the previous
+    position's logits — so every emitted token is exactly the token
+    non-speculative greedy decoding would have produced (the parity
+    invariant speculate.py documents).  Consumes no randomness.
+
+    Stochastic: per-position rejection sampling against the drafter's
+    point-mass proposal — draft g at position i is accepted with
+    probability p_i(g) under the filtered/temperature distribution, and
+    a rejection resamples from p_i with g masked out (the renormalized
+    residual), so each emitted token is marginally distributed exactly
+    as p_i, same as non-speculative sampling.  One split per slot per
+    window, then per-position fold_in — acceptance at one position
+    cannot perturb the draw at another."""
+    B, L, _ = logits.shape
+    d = L - 1
+    if sc.method == "greedy":
+        t = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # (B, L)
+        ok = (drafts == t[:, :d]).astype(jnp.int32)
+        n_acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1).astype(jnp.int32)
+        return t, n_acc, keys
+    pairs = jax.vmap(jax.random.split)(keys)                    # (B, 2, 2)
+    new_keys, subs = pairs[:, 0], pairs[:, 1]
+    l = _filter_logits(logits.reshape(B * L, -1), sc).reshape(
+        B, L, logits.shape[-1])
+    probs = jax.nn.softmax(l, axis=-1)
+    pkeys = jax.vmap(lambda k: jax.vmap(
+        lambda i: jax.random.fold_in(k, i))(jnp.arange(L)))(subs)
+    halves = jax.vmap(jax.vmap(jax.random.split))(pkeys)        # (B, L, 2, 2)
+    k_u, k_c = halves[:, :, 0], halves[:, :, 1]
+    u = jax.vmap(jax.vmap(jax.random.uniform))(k_u)             # (B, L)
+    p_draft = jnp.take_along_axis(probs[:, :d], drafts[..., None],
+                                  axis=-1)[..., 0]              # (B, d)
+    acc = (u[:, :d] < p_draft).astype(jnp.int32)
+    n_acc = jnp.sum(jnp.cumprod(acc, axis=1), axis=1).astype(jnp.int32)
+    # replacement draw at every position: the rejected draft is masked out
+    # of its own row (the bonus row at i == d has no draft: -1 matches no
+    # vocabulary id, so its draw is the plain filtered categorical)
+    pad = jnp.concatenate(
+        [drafts, jnp.full((B, 1), -1, jnp.int32)], axis=1)      # (B, L)
+    lm = jnp.where(jnp.arange(l.shape[-1])[None, None, :] == pad[..., None],
+                   -jnp.inf, l)
+    repl = jax.vmap(jax.vmap(jax.random.categorical))(
+        k_c, lm).astype(jnp.int32)                              # (B, L)
+    out = jnp.where(jnp.arange(L)[None, :] < n_acc[:, None], pad, repl)
+    return out, n_acc, new_keys

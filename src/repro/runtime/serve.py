@@ -62,6 +62,30 @@ copy (copy-on-write) instead, so cached pages are never written.
 Recurrent-hybrid archs opt out silently (their state accumulates over
 every token) but stream identically.
 
+Speculative decoding (`EngineOptions.speculation.draft_len > 0`): each
+tick step drafts `draft_len` tokens from a device-resident per-slot
+n-gram table (`runtime/speculate.py` — self-speculation, no second
+model), scores the whole window [last_tok, g_1..g_d] in ONE forward
+through the same chunked path prefill uses, and accepts/replaces every
+position on device (`sampling.spec_verify`).  Accepted tokens advance
+the slot several positions per step; rejected draft rows are rolled
+back through the block table (`pages.rollback`, honouring the same
+write-mask/ownership/bound discipline as the write) or the dense
+scatter (`speculate.rollback_dense`).  Greedy streams are bit-identical
+to non-speculative decoding (invariants A1-A5 in speculate.py); the
+host still syncs once per tick whatever the acceptance length.
+Recurrent-hybrid, cross-attention and MoE archs opt out silently
+(recurrent state cannot rewind; MoE capacity drops depend on the
+token count per call, which would break verify/decode bit parity).
+
+Construction: `Engine(cfg, params, options=EngineOptions(...))` is the
+primary constructor (`repro.runtime.options`); the historic flat kwargs
+are still accepted and merged over `options` via `EngineOptions.build`.
+Completed requests carry a structured `options.RequestResult` (tokens,
+finish_reason, prefill/speculation/page-sharing counters) in
+`Request.result`, and `Engine.run` returns the results completed during
+the call.
+
 The Python `Engine` is a thin wrapper holding the request queue and the
 `pages.HostPool` mirror of the device allocator; it is also a context
 manager so the process-global sharding ctx activated by `mesh=` is
@@ -83,26 +107,34 @@ from repro.models import model as M
 from repro.parallel import sharding as shd
 from repro.runtime import pages as pg
 from repro.runtime import sampling as smp
+from repro.runtime import speculate as spc
+from repro.runtime.options import EngineOptions, RequestResult
 
 
 class SlotState(NamedTuple):
     """Per-slot decode state; one device-resident pytree for all slots.
 
     `pages` is the refcounted paged-KV allocator state (empty arrays
-    under the dense layout); see `repro.runtime.pages.PagePool`."""
+    under the dense layout); see `repro.runtime.pages.PagePool`.
+    `draft` is the per-slot n-gram drafter state (zero-width when
+    speculation is off); see `repro.runtime.speculate.DraftState`."""
     last_tok: jax.Array     # (S,) i32  last sampled token (next decode input)
     pos: jax.Array          # (S,) i32  next cache index to write
     budget: jax.Array       # (S,) i32  tokens still to emit after this one
     active: jax.Array       # (S,) bool slot is mid-generation
     rng: jax.Array          # (S, 2) u32 per-request sampling key chain
+    stop: jax.Array         # (S, K) i32 per-request stop set, -1 padded
     pages: pg.PagePool      # refcounted page allocator (paged layout)
+    draft: spc.DraftState   # n-gram drafter tables (speculation)
+    n_drafted: jax.Array    # (S,) i32 drafted tokens, current occupant
+    n_accepted: jax.Array   # (S,) i32 drafted tokens emitted
 
 
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int
+    max_new_tokens: int           # effective budget (clamped to max_seq room)
     seed: int = 0
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
@@ -111,6 +143,16 @@ class Request:
     # prefix-cache keys, hashed once at submit: prefix_keys[i] identifies
     # the (i+1)*prefix_chunk-token prefix of `prompt`
     prefix_keys: tuple = ()
+    stop_tokens: tuple = ()       # per-request stop set (engine default or
+    #                               the submit(stop_tokens=...) override)
+    requested: int = 0            # max_new_tokens as asked (pre-clamp)
+    clamped: bool = False         # budget clamped by max_seq at submit
+    aborted: bool = False
+    prefill_tokens: int = 0       # prompt tokens whose prefill compute ran
+    pages_shared: int = 0         # prefix pages mapped read-only at admit
+    drafted_tokens: int = 0
+    accepted_tokens: int = 0
+    result: RequestResult | None = None   # set when the request completes
 
 
 class Engine:
@@ -133,6 +175,13 @@ class Engine:
       seed          — engine base seed; a request's stream is keyed by
                       fold_in(base, request.seed) only, so it reproduces
                       across slots and co-batched traffic
+      stop_tokens   — default per-request stop set; `eos_id=N` is legacy
+                      shorthand for stop_tokens=(N,), and submit's
+                      stop_tokens= overrides per request
+      draft_len     — speculative draft window per decode step; 0 (the
+                      default) disables speculation entirely
+      spec_ngram / spec_table — n-gram order and per-slot table buckets
+                      of the self-speculation drafter (speculate.py)
       kv_layout     — "paged" (default) or "dense" (see module docstring)
       num_pages     — paged pool size; default num_slots * ceil(max_seq /
                       cfg.page_size) (capacity-equal to dense — shrink it
@@ -150,41 +199,29 @@ class Engine:
                       after every sync; debug aid, costs extra transfers
     """
 
-    def __init__(self, cfg, params, num_slots: int, max_seq: int,
-                 eos_id: int | None = None, mesh=None,
-                 capacity_factor: float | None = None,
-                 dispatch: str | None = None,
-                 sampling: str | smp.SamplingConfig = "greedy",
-                 temperature: float = 1.0, top_k: int = 0, top_p: float = 1.0,
-                 decode_steps: int = 1, prefill_chunk: int = 16,
-                 seed: int = 0, kv_layout: str = "paged",
-                 num_pages: int | None = None,
-                 prefix_cache: bool = True,
-                 prefix_chunk: int | None = None,
-                 prefix_max_chains: int = 4096,
-                 check_invariants: bool = False):
-        # mesh may be a jax Mesh or a composed-mesh spec ("model=4",
-        # "data=2,model=4", "2x4", 4, ...) resolved by sharding.build_mesh.
+    def __init__(self, cfg, params, num_slots: int | None = None,
+                 max_seq: int | None = None, *,
+                 options: EngineOptions | None = None, **legacy):
+        # `options` is the primary constructor surface; any flat legacy
+        # kwargs (including the positional num_slots/max_seq) are merged
+        # over it by EngineOptions.build, which owns all validation.
+        if num_slots is not None:
+            legacy["num_slots"] = num_slots
+        if max_seq is not None:
+            legacy["max_seq"] = max_seq
+        options = EngineOptions.build(base=options, **legacy)
+        self.options = options
+        sch, par = options.schedule, options.parallel
+        num_slots, max_seq = sch.num_slots, sch.max_seq
         # capacity_factor / dispatch override the MoE routing knobs on cfg
         # (moe_capacity_factor / ep_dispatch) for this engine — the jit'd
         # prefill/decode close over cfg, so the override must happen here,
         # before any tracing.
-        if dispatch is not None:
-            if dispatch not in ("global", "per_source"):
-                raise ValueError(f"dispatch must be 'global' or "
-                                 f"'per_source', got {dispatch!r}")
-            cfg = cfg.replace(ep_dispatch=dispatch)
-        if capacity_factor is not None:
-            cfg = cfg.replace(moe_capacity_factor=float(capacity_factor))
-        if isinstance(sampling, str):
-            sampling = smp.SamplingConfig(method=sampling,
-                                          temperature=temperature,
-                                          top_k=top_k, top_p=top_p)
-        if decode_steps < 1:
-            raise ValueError(f"decode_steps must be >= 1, got {decode_steps}")
-        if kv_layout not in ("paged", "dense"):
-            raise ValueError(f"kv_layout must be 'paged' or 'dense', "
-                             f"got {kv_layout!r}")
+        if par.dispatch is not None:
+            cfg = cfg.replace(ep_dispatch=par.dispatch)
+        if par.capacity_factor is not None:
+            cfg = cfg.replace(moe_capacity_factor=float(par.capacity_factor))
+        mesh = par.mesh
         if mesh is not None and not isinstance(mesh, jax.sharding.Mesh):
             mesh = shd.build_mesh(mesh)
         self.mesh = mesh
@@ -196,29 +233,42 @@ class Engine:
                                     shd.param_shardings(params, self._ctx))
         self.cfg, self.params = cfg, params
         self.num_slots, self.max_seq = num_slots, max_seq
-        self.eos_id = eos_id
-        self.sampling = sampling
-        self.decode_steps = decode_steps
-        self.check_invariants = check_invariants
+        self.stop_tokens = sch.stop_tokens
+        # legacy attr: the single-token stop set older callers passed
+        self.eos_id = sch.stop_tokens[0] if len(sch.stop_tokens) == 1 \
+            else None
+        self.sampling = options.sampling
+        self.decode_steps = sch.decode_steps
+        self.check_invariants = options.debug.check_invariants
         # recurrent mixers (mamba/mlstm/slstm) can't skip padding in their
         # state, so their prompts are fed token-by-token (chunk = 1); a
         # chunk can never exceed the cache (its write must fit max_seq)
         recurrent = any(m in spec for spec in cfg.layer_pattern
                         for m in ("mamba", "mlstm", "slstm"))
         self.prefill_chunk = 1 if recurrent \
-            else max(1, min(prefill_chunk, max_seq - 1))
+            else max(1, min(sch.prefill_chunk, max_seq - 1))
+        # --- speculation (silent opt-outs: recurrent state cannot rewind
+        # a rejected draft; xattn decode needs vision inputs; MoE capacity
+        # drops depend on tokens-per-call, breaking verify/decode parity)
+        spec_ok = not recurrent \
+            and not any("xattn" in s or "moe" in s
+                        for s in cfg.layer_pattern)
+        self.draft_len = min(options.speculation.draft_len,
+                             max(0, max_seq - 2)) if spec_ok else 0
+        self.drafter = spc.NGramDrafter(options.speculation.ngram,
+                                        options.speculation.table) \
+            if self.draft_len else None
+        self._stop_cap = max(4, len(self.stop_tokens))
         self._next_uid = itertools.count()
-        self._base_key = jax.random.PRNGKey(seed)
+        self._base_key = jax.random.PRNGKey(sch.seed)
         # --- KV layout ---
-        self.kv_layout = kv_layout
+        self.kv_layout = options.paging.kv_layout
         self.page_size = cfg.page_size
         self.pages_per_slot = -(-max_seq // self.page_size)  # table length
-        if kv_layout == "paged":
-            self.num_pages = int(num_pages) if num_pages is not None \
+        if self.kv_layout == "paged":
+            self.num_pages = int(options.paging.num_pages) \
+                if options.paging.num_pages is not None \
                 else num_slots * self.pages_per_slot
-            if self.num_pages < 1:
-                raise ValueError(f"num_pages must be >= 1, "
-                                 f"got {self.num_pages}")
             self.caches = M.init_cache(cfg, num_slots, max_seq,
                                        num_pages=self.num_pages)
             self._pool_flags = M.cache_pool_flags(cfg)
@@ -231,14 +281,19 @@ class Engine:
             self._pool_flags = None
             mp, P = 0, 0
             self.pool = None
+        # dense speculative rollback routes through the KV leaf flags
+        # (same tree structure as the paged pool flags)
+        self._kv_flags = M.cache_pool_flags(cfg) \
+            if self.draft_len and self.kv_layout == "dense" else None
         # --- prefix cache (paged only; recurrent state accumulates over
         # every token, so those archs cannot share prefixes — they opt out
         # silently but stream identically) ---
-        self.prefix_chunk = int(prefix_chunk) if prefix_chunk is not None \
-            else self.page_size
-        enabled = prefix_cache and kv_layout == "paged" and not recurrent
+        self.prefix_chunk = int(options.prefix.chunk) \
+            if options.prefix.chunk is not None else self.page_size
+        enabled = options.prefix.enabled and self.kv_layout == "paged" \
+            and not recurrent
         self.prefix = pg.PrefixCache(self.prefix_chunk, self.page_size,
-                                     max_chains=prefix_max_chains) \
+                                     max_chains=options.prefix.max_chains) \
             if enabled else None
         self.state = SlotState(
             last_tok=jnp.zeros((num_slots,), jnp.int32),
@@ -246,9 +301,15 @@ class Engine:
             budget=jnp.zeros((num_slots,), jnp.int32),
             active=jnp.zeros((num_slots,), bool),
             rng=jnp.zeros((num_slots, 2), jnp.uint32),
-            pages=pg.init_pool(num_slots, mp, P))
+            stop=jnp.full((num_slots, self._stop_cap), -1, jnp.int32),
+            pages=pg.init_pool(num_slots, mp, P),
+            draft=self.drafter.init_state(num_slots) if self.draft_len
+            else spc.empty_state(num_slots),
+            n_drafted=jnp.zeros((num_slots,), jnp.int32),
+            n_accepted=jnp.zeros((num_slots,), jnp.int32))
         self.slot_req: list[Request | None] = [None] * num_slots
         self._queue: list[Request] = []
+        self._finished: list[RequestResult] = []
         # pool-occupancy telemetry; occupancy itself lives in the HostPool
         # mirror (`pages_in_use` property), kept in lockstep with the
         # device allocator so backpressure never needs an extra sync
@@ -261,10 +322,14 @@ class Engine:
         self.n_admit_calls = 0
         self.n_syncs = 0
         self.n_generated = 0
+        # engine-lifetime speculation totals (folded in as requests retire)
+        self.tokens_drafted = 0
+        self.tokens_accepted = 0
         # buffer donation lets caches/state update in place; the CPU
         # backend doesn't implement donation and would warn on every call
         donate = () if jax.default_backend() == "cpu" else (1, 2)
-        self._tick = jax.jit(self._make_tick(), donate_argnums=donate)
+        tick = self._make_spec_tick() if self.draft_len else self._make_tick()
+        self._tick = jax.jit(tick, donate_argnums=donate)
         self._admit_chunk = jax.jit(self._make_admit_chunk(),
                                     donate_argnums=donate)
 
@@ -276,11 +341,14 @@ class Engine:
         """The PagedKV bundle for one traced call; write_mask is supplied
         by the caller (valid slots at admit, active slots in the tick).
         `owned` routes writes aimed at shared prefix pages to the drop
-        index — a slot can never corrupt a page other consumers read."""
-        def bundle(write_mask):
+        index — a slot can never corrupt a page other consumers read.
+        `bound` (speculation) additionally drops rows at or past the
+        per-slot accepted-length bound."""
+        def bundle(write_mask, bound=None):
             return attn.PagedKV(tables=pool.tables, n_pages=pool.n_pages,
                                 write_mask=write_mask, max_seq=self.max_seq,
-                                page_size=self.page_size, owned=pool.owned)
+                                page_size=self.page_size, owned=pool.owned,
+                                bound=bound)
         return bundle
 
     def _make_tick(self):
@@ -289,7 +357,7 @@ class Engine:
         inside the tick holds is released before the host ever syncs —
         pages reaching refcount zero rejoin the free set."""
         cfg, sc = self.cfg, self.sampling
-        eos, max_seq, steps = self.eos_id, self.max_seq, self.decode_steps
+        max_seq, steps = self.max_seq, self.decode_steps
         paged_mode = self.kv_layout == "paged"
 
         def tick(params, state, caches):
@@ -310,12 +378,100 @@ class Engine:
                 rng = jnp.where(emit[:, None], keys, state.rng)
                 pos = jnp.where(emit, state.pos + 1, state.pos)
                 budget = jnp.where(emit, state.budget - 1, state.budget)
-                hit_eos = (emit & (tok == eos)) if eos is not None \
-                    else jnp.zeros_like(emit)
-                active = emit & (budget > 0) & ~hit_eos & (pos < max_seq - 1)
+                # -1-padded stop rows match no real token id
+                hit_stop = emit & jnp.any(tok[:, None] == state.stop, axis=1)
+                active = emit & (budget > 0) & ~hit_stop & (pos < max_seq - 1)
                 new = state._replace(last_tok=tok, pos=pos, budget=budget,
                                      active=active, rng=rng)
                 return (new, caches), (tok, emit)
+
+            pre_active = state.active
+            (state, caches), (toks, emitted) = jax.lax.scan(
+                body, (state, caches), None, length=steps)
+            if paged_mode:
+                dead = pre_active & ~state.active
+                state = state._replace(pages=pg.release(state.pages, dead))
+            return state, caches, toks, emitted
+
+        return tick
+
+    def _make_spec_tick(self):
+        """The speculative tick: each of the `decode_steps` scanned steps
+        drafts `draft_len` tokens from the slot's n-gram table, scores
+        the window [last_tok, g_1..g_d] in ONE chunked forward (the same
+        path prefill uses — logits[:, i] conditions on the first i
+        drafts), accepts/replaces on device (`sampling.spec_verify`) and
+        clamps the emission count by stop tokens / budget / max_seq
+        exactly as the sequential loop would (invariant A3).  Rejected
+        draft rows are rolled back before the step ends (A4).  One host
+        sync per tick, however many tokens each window lands."""
+        cfg, sc = self.cfg, self.sampling
+        max_seq, steps, d = self.max_seq, self.decode_steps, self.draft_len
+        L = d + 1
+        paged_mode = self.kv_layout == "paged"
+        pool_flags, kv_flags = self._pool_flags, self._kv_flags
+        drafter = self.drafter
+
+        def tick(params, state, caches):
+            def body(carry, _):
+                state, caches = carry
+                drafts = drafter.propose(state.draft, d)          # (S, d)
+                chunk = jnp.concatenate([state.last_tok[:, None], drafts],
+                                        axis=1)
+                win = state.pos[:, None] \
+                    + jnp.arange(L, dtype=jnp.int32)[None]
+                # rows a non-speculative run could never reach are dropped
+                # at write time (the per-slot accepted-length bound)
+                bound = state.pos + state.budget
+                if paged_mode:
+                    pv = self._paged_kv(state.pages)(state.active, bound)
+                else:
+                    pv = attn.DenseKV(write_mask=state.active,
+                                      max_seq=max_seq, bound=bound)
+                logits, _, caches = M.forward(
+                    params, {"tokens": chunk}, cfg, caches=caches,
+                    cache_pos=state.pos, paged=pv)
+                out, n_acc, keys = smp.spec_verify(logits, drafts,
+                                                   state.rng, sc)
+                idx = jnp.arange(L, dtype=jnp.int32)[None]
+                is_stop = jnp.any(out[..., None] == state.stop[:, None, :],
+                                  axis=-1)                        # (S, L)
+                stop_at = jnp.min(jnp.where(is_stop, idx, L), axis=1)
+                # emitted tokens this window: accepted drafts + the
+                # model's correction/bonus, clamped exactly as the
+                # sequential loop clamps per token (A3); >= 1 for active
+                # slots (budget >= 1 and pos < max_seq - 1 while active)
+                n_emit = jnp.minimum(
+                    jnp.minimum(n_acc + 1, stop_at + 1),
+                    jnp.minimum(state.budget, max_seq - 1 - state.pos))
+                n_emit = jnp.where(state.active, n_emit, 0)
+                emit = idx < n_emit[:, None]                      # (S, L)
+                # roll back the rejected rows (window indices >= n_emit)
+                rej = jnp.where(emit | ~state.active[:, None], max_seq, win)
+                if paged_mode:
+                    caches = pg.rollback(caches, pool_flags, pv, rej)
+                else:
+                    caches = spc.rollback_dense(caches, kv_flags, rej,
+                                                state.active, max_seq)
+                last = jnp.take_along_axis(
+                    out, jnp.clip(n_emit - 1, 0, L - 1)[:, None],
+                    axis=1)[:, 0]
+                tok = jnp.where(state.active, last, state.last_tok)
+                rng = jnp.where(state.active[:, None], keys, state.rng)
+                pos = state.pos + n_emit
+                budget = state.budget - n_emit
+                stopped = jnp.any(is_stop & emit, axis=1)
+                active = state.active & ~stopped & (budget > 0) \
+                    & (pos < max_seq - 1)
+                # the drafter learns only VERIFIED emissions, in order
+                ds = drafter.observe(state.draft, out, emit)
+                new = state._replace(
+                    last_tok=tok, pos=pos, budget=budget, active=active,
+                    rng=rng, draft=ds,
+                    n_drafted=state.n_drafted
+                    + jnp.where(state.active, d, 0),
+                    n_accepted=state.n_accepted + jnp.maximum(n_emit - 1, 0))
+                return (new, caches), (out, emit)
 
             pre_active = state.active
             (state, caches), (toks, emitted) = jax.lax.scan(
@@ -346,14 +502,15 @@ class Engine:
         prefix ends mid-page.  Later chunks pass an all-False `admitting`
         mask and zero deltas — the allocator is a no-op there."""
         cfg, sc = self.cfg, self.sampling
-        eos, max_seq, ns = self.eos_id, self.max_seq, self.num_slots
+        max_seq, ns = self.max_seq, self.num_slots
         base_key = self._base_key
         paged_mode = self.kv_layout == "paged"
         pool_flags = self._pool_flags
+        draft_len, drafter = self.draft_len, self.drafter
 
         def admit(params, state, caches, tokens, valid, first, offsets,
-                  true_lens, seeds, budgets0, admitting, shared, n_shared,
-                  new_pages, cow_src, evict_delta, register_delta):
+                  true_lens, seeds, budgets0, stops, admitting, shared,
+                  n_shared, new_pages, cow_src, evict_delta, register_delta):
             C = tokens.shape[1]
             if paged_mode:
                 pool = pg.admit_update(state.pages, admitting, shared,
@@ -422,16 +579,33 @@ class Engine:
             final = valid & (offsets + C >= true_lens)
             keys0 = smp.request_keys(base_key, seeds)
             toks, keys = smp.sample(last, keys0, sc)
-            hit_eos = (final & (toks == eos)) if eos is not None \
-                else jnp.zeros_like(final)
-            act = final & (budgets0 > 0) & ~hit_eos \
+            # per-request stop set; -1 padding matches no real token id
+            hit_stop = final & jnp.any(toks[:, None] == stops, axis=1)
+            act = final & (budgets0 > 0) & ~hit_stop \
                 & (true_lens < max_seq - 1)
             state = state._replace(
                 last_tok=jnp.where(final, toks, state.last_tok),
                 pos=jnp.where(final, true_lens, state.pos),
                 budget=jnp.where(final, budgets0, state.budget),
                 active=jnp.where(final, act, state.active),
-                rng=jnp.where(final[:, None], keys, state.rng))
+                rng=jnp.where(final[:, None], keys, state.rng),
+                stop=jnp.where(final[:, None], stops, state.stop))
+            if draft_len:
+                # seed the drafter from the prompt: clear the slot on its
+                # first chunk, then observe this chunk's real tokens in
+                # order, plus the sampled first token on the final chunk —
+                # so tick-time proposals can draft from prompt n-grams
+                # (prompt-lookup decoding)
+                ds = drafter.reset(state.draft, first)
+                cmask = valid[:, None] \
+                    & (offsets[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+                       < true_lens[:, None])
+                ds = drafter.observe(ds, tokens, cmask)
+                ds = drafter.observe(ds, toks[:, None], final[:, None])
+                state = state._replace(
+                    draft=ds,
+                    n_drafted=jnp.where(first, 0, state.n_drafted),
+                    n_accepted=jnp.where(first, 0, state.n_accepted))
             if paged_mode:
                 # a request that terminates AT admission (first token EOS,
                 # or no decode room) must drop its references right here
@@ -453,7 +627,14 @@ class Engine:
         return -(-rows // self.page_size)
 
     def submit(self, prompt, max_new_tokens: int = 16,
-               seed: int | None = None) -> Request:
+               seed: int | None = None,
+               stop_tokens: tuple | None = None) -> Request:
+        """Queue a prompt.  `stop_tokens` overrides the engine's default
+        stop set for this request (any emitted token in the set ends the
+        stream, finish_reason="eos").  A budget that cannot fit the cache
+        is clamped deterministically here — the request then runs to the
+        max_seq ceiling and finishes with reason "max_seq" instead of
+        silently stopping short."""
         prompt = np.asarray(prompt, np.int32)
         if not 1 <= len(prompt) <= self.max_seq - 1:
             # an oversized prompt would clamp its chunk offsets into
@@ -466,6 +647,22 @@ class Engine:
             # for 0 tokens used to get 1
             raise ValueError(f"max_new_tokens must be >= 1, "
                              f"got {max_new_tokens}")
+        stop = self.stop_tokens if stop_tokens is None \
+            else tuple(int(t) for t in stop_tokens)
+        if len(stop) > self._stop_cap:
+            # the (S, K) stop matrix is baked into the compiled tick
+            raise ValueError(
+                f"stop_tokens holds {len(stop)} ids but this engine was "
+                f"built with capacity {self._stop_cap} (max(4, "
+                f"len(default stop set)))")
+        requested = max_new_tokens
+        clamped = len(prompt) + max_new_tokens > self.max_seq
+        if clamped:
+            # the decode loop would stop at the max_seq - 1 ceiling anyway;
+            # clamping HERE makes the effective budget visible to paging
+            # (no pages reserved for tokens that can never exist) and to
+            # the finish_reason ("max_seq", not a silent short "budget")
+            max_new_tokens = self.max_seq - len(prompt)
         if self.kv_layout == "paged":
             need = self._need_pages(len(prompt), max_new_tokens)
             if need > self.num_pages:
@@ -480,7 +677,9 @@ class Engine:
         req = Request(uid=uid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       seed=uid if seed is None else int(seed),
-                      t_submit=time.perf_counter())
+                      t_submit=time.perf_counter(),
+                      stop_tokens=stop, requested=requested,
+                      clamped=clamped)
         if self.prefix is not None:
             # hash every chunk-aligned prefix ONCE, here — admission only
             # compares precomputed keys
@@ -587,6 +786,9 @@ class Engine:
         starts = {s: plan[s][0] if paged else 0 for s, _ in admitted}
         n_chunks = {s: max(1, -(-(len(r.prompt) - starts[s]) // C))
                     for s, r in admitted}
+        for slot, req in admitted:
+            req.prefill_tokens = len(req.prompt) - starts[slot]
+            req.pages_shared = len(plan[slot][1]) if paged else 0
         if paged:
             for slot, req in admitted:
                 self.prefill_chunks_skipped += \
@@ -600,6 +802,7 @@ class Engine:
             true_lens = np.ones((ns,), np.int32)
             seeds = np.zeros((ns,), np.int32)
             budgets0 = np.zeros((ns,), np.int32)
+            stops = np.full((ns, self._stop_cap), -1, np.int32)
             admitting = np.zeros((ns,), bool)
             shared = np.zeros((ns, self.pages_per_slot), np.int32)
             n_shared = np.zeros((ns,), np.int32)
@@ -638,15 +841,17 @@ class Engine:
                 true_lens[slot] = len(req.prompt)
                 seeds[slot] = req.seed
                 budgets0[slot] = req.max_new_tokens - 1
+                stops[slot, :len(req.stop_tokens)] = req.stop_tokens
             first = valid if ci == 0 else np.zeros((ns,), bool)
             self.state, self.caches, toks = self._admit_chunk(
                 self.params, self.state, self.caches, jnp.asarray(tokens),
                 jnp.asarray(valid), jnp.asarray(first), jnp.asarray(offsets),
                 jnp.asarray(true_lens), jnp.asarray(seeds),
-                jnp.asarray(budgets0), jnp.asarray(admitting),
-                jnp.asarray(shared), jnp.asarray(n_shared),
-                jnp.asarray(new_pages), jnp.asarray(cow_src),
-                jnp.asarray(ev_arr), jnp.asarray(rg_arr))
+                jnp.asarray(budgets0), jnp.asarray(stops),
+                jnp.asarray(admitting), jnp.asarray(shared),
+                jnp.asarray(n_shared), jnp.asarray(new_pages),
+                jnp.asarray(cow_src), jnp.asarray(ev_arr),
+                jnp.asarray(rg_arr))
             self.n_admit_calls += 1
             for slot, req in admitted:
                 if ci == n_chunks[slot] - 1:
@@ -668,10 +873,40 @@ class Engine:
     def _release_slot(self, slot: int) -> None:
         """Host-side retirement: mark the request done, free the slot and
         replay the device-side refcount release in the HostPool mirror."""
-        self.slot_req[slot].done = True
+        req = self.slot_req[slot]
         self.slot_req[slot] = None
         if self.pool is not None:
             self.pool.release_slot(slot)
+        self._finish(req)
+
+    def _finish(self, req: Request) -> None:
+        """Seal a completed request: classify the finish reason (highest
+        precedence first), build the structured RequestResult and fold the
+        request's speculation counters into the engine totals."""
+        req.done = True
+        out = req.out_tokens
+        if req.aborted:
+            reason = "aborted"
+        elif out and out[-1] in req.stop_tokens:
+            reason = "eos"
+        elif req.clamped and len(out) >= req.max_new_tokens:
+            # the budget was clamped at submit, so exhausting it means the
+            # stream ran into the cache ceiling, not the caller's ask
+            reason = "max_seq"
+        elif len(out) >= req.max_new_tokens:
+            reason = "budget"
+        else:
+            reason = "max_seq"
+        self.tokens_drafted += req.drafted_tokens
+        self.tokens_accepted += req.accepted_tokens
+        req.result = RequestResult(
+            uid=req.uid, tokens=tuple(out), finish_reason=reason,
+            prefill_tokens=req.prefill_tokens,
+            drafted_tokens=req.drafted_tokens,
+            accepted_tokens=req.accepted_tokens,
+            pages_shared=req.pages_shared,
+            ttft=(req.t_first - req.t_submit) if req.t_first else None)
+        self._finished.append(req.result)
 
     # ------------------------------------------------------------------
     # telemetry / debug
@@ -695,6 +930,19 @@ class Engine:
                 "tokens_skipped": c.tokens_skipped,
                 "evictions": c.evictions, "cached_pages": c.cached_pages,
                 "chunks_skipped": self.prefill_chunks_skipped}
+
+    def spec_stats(self) -> dict:
+        """Speculation telemetry: drafted/accepted totals over retired
+        requests plus the live slots' in-flight counters."""
+        drafted, accepted = self.tokens_drafted, self.tokens_accepted
+        for r in self.slot_req:
+            if r is not None:
+                drafted += r.drafted_tokens
+                accepted += r.accepted_tokens
+        return {"enabled": bool(self.draft_len),
+                "draft_len": self.draft_len,
+                "drafted": drafted, "accepted": accepted,
+                "acceptance_rate": accepted / drafted if drafted else 0.0}
 
     def _verify_invariants(self) -> None:
         """Debug-mode cross-check (`check_invariants=True`): the HostPool
@@ -748,28 +996,72 @@ class Engine:
             return False
         self.state, self.caches, toks, emitted = self._tick(
             self.params, self.state, self.caches)
-        toks = np.asarray(toks)                       # (steps, slots)
+        # non-spec tick: (steps, slots); spec tick: (steps, slots, window)
+        # — normalize to a trailing window axis of 1
+        toks = np.asarray(toks)
         emitted = np.asarray(emitted)
+        if toks.ndim == 2:
+            toks, emitted = toks[..., None], emitted[..., None]
         active = np.asarray(self.state.active)
+        if self.draft_len:
+            n_dr = np.asarray(self.state.n_drafted)
+            n_ac = np.asarray(self.state.n_accepted)
         self.n_ticks += 1
         self.n_syncs += 1
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
             for t in range(toks.shape[0]):
-                if emitted[t, slot]:
-                    req.out_tokens.append(int(toks[t, slot]))
-                    self.n_generated += 1
+                for j in range(toks.shape[2]):
+                    if emitted[t, slot, j]:
+                        req.out_tokens.append(int(toks[t, slot, j]))
+                        self.n_generated += 1
+            if self.draft_len:
+                req.drafted_tokens = int(n_dr[slot])
+                req.accepted_tokens = int(n_ac[slot])
             if not active[slot]:
                 self._release_slot(slot)
         if self.check_invariants and self.kv_layout == "paged":
             self._verify_invariants()
         return True
 
-    def run(self, max_ticks: int = 10_000) -> None:
+    def run(self, max_ticks: int = 10_000) -> list[RequestResult]:
+        """Serve until the queue drains (or max_ticks), returning the
+        RequestResults completed during this call, completion order."""
         for _ in range(max_ticks):
             if not self.step() and not self._queue:
                 break
+        done, self._finished = self._finished, []
+        return done
+
+    def abort(self, req: Request) -> bool:
+        """Cancel a request.  Queued: removed before it ever runs.
+        Running: its slot is deactivated and (paged) its page references
+        released immediately — the freed pages are grantable in the very
+        next admission round.  Returns False if the request had already
+        finished.  Either way an aborted request keeps the tokens it
+        emitted, with finish_reason \"aborted\"."""
+        if req.done:
+            return False
+        req.aborted = True
+        if req in self._queue:
+            self._queue.remove(req)
+            self._finish(req)
+            return True
+        for slot, r in enumerate(self.slot_req):
+            if r is req:
+                dead = jnp.zeros((self.num_slots,), bool).at[slot].set(True)
+                state = self.state._replace(active=self.state.active & ~dead)
+                if self.kv_layout == "paged":
+                    state = state._replace(pages=pg.release(state.pages,
+                                                            dead))
+                self.state = state
+                self._release_slot(slot)
+                if self.check_invariants and self.kv_layout == "paged":
+                    self._verify_invariants()
+                return True
+        # not queued, not in a slot, not done — unreachable by construction
+        raise AssertionError(f"request {req.uid} is in no engine structure")
 
     def close(self) -> None:
         """Release the engine's sharding context (the activate() in __init__

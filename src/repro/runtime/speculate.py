@@ -1,0 +1,200 @@
+"""Self-speculative decoding for the serving engine: draft cheap, verify
+exact — the BRAMAC trade (a reduced-precision approximate datapath whose
+results are validated by the exact one) applied to token generation.
+
+The drafter here is *self*-speculation: no second model.  Each slot
+carries a device-resident direct-mapped n-gram table learned online from
+its own prompt + emitted tokens; `propose` chains `draft_len` lookups
+from the slot's recent history, the engine scores the whole window
+[last_tok, g_1..g_d] in ONE batched forward (the same chunked path
+prefill uses), and `sampling.spec_verify` accepts or replaces every
+position on device.  A `Drafter` protocol leaves the seam for a future
+model-based drafter (e.g. a 2-bit quantized BRAMAC draft model) — the
+engine only calls init_state / reset / observe / propose.
+
+Acceptance invariants (the contract the parity suite proves, in the
+style of pages.py's I1-I5):
+
+  A1 (greedy parity)  Under greedy sampling the emitted stream is
+      bit-identical to non-speculative decoding, whatever the drafter
+      proposes: position i's draft is accepted iff it EQUALS the argmax
+      of position i-1's verify logits, and the first rejected position
+      emits that argmax instead — so every emitted token is exactly the
+      token the sequential loop would have produced.  A drafter can only
+      change how fast tokens appear, never which tokens.
+  A2 (stochastic marginals)  Under temperature/top_k/top_p the accept
+      rule is rejection sampling against the drafter's point mass:
+      accept g with prob p(g), else resample from p with g masked out —
+      each emitted token is marginally ~ p, same as the sequential loop
+      (the stream itself may differ: randomness is consumed per window,
+      not per token).
+  A3 (termination parity)  Stop-token / budget / max_seq clamping is
+      applied to the accepted window exactly as the sequential loop
+      would: n_emit = min(first-stop-index + 1, n_acc + 1, budget,
+      max_seq - 1 - pos), so a request terminates on the same token it
+      would have without speculation.
+  A4 (rollback)  KV rows written for rejected draft positions
+      (window indices >= n_emit) are zeroed through the same
+      write-mask/ownership/bound discipline as the original write
+      (pages.rollback for the paged pool, rollback_dense here) before
+      the tick returns.  Those rows are never attended — the next
+      window's queries start at pos + n_emit and overwrite them — but
+      rolling them back keeps the cache equal to what a non-speculative
+      engine would hold, page-boundary crossings included.
+  A5 (determinism)  Table inserts are a sequential scan over observed
+      positions (last write wins), never a duplicate-index scatter whose
+      XLA ordering is unspecified — the device table bit-matches the
+      pure-Python reference replay (tests/test_speculative.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Protocol
+
+import jax
+import jax.numpy as jnp
+
+# FNV-1a over (token + 1) in wrapping uint32; +1 keeps the -1 history
+# padding from colliding with token 0
+FNV_OFFSET = 2166136261
+FNV_PRIME = 16777619
+
+
+def ngram_hash(ctx):
+    """(… , n) i32 token context -> (…,) u32 hash (FNV-1a, wrapping)."""
+    h = jnp.full(ctx.shape[:-1], FNV_OFFSET, jnp.uint32)
+    for j in range(ctx.shape[-1]):
+        h = (h ^ (ctx[..., j] + 1).astype(jnp.uint32)) \
+            * jnp.uint32(FNV_PRIME)
+    return h
+
+
+class DraftState(NamedTuple):
+    """Per-slot drafter state, device-resident inside SlotState.
+
+    keys  (S, T) u32 — full context hash stored per bucket (direct-mapped;
+          an exact-match check at lookup, 0 means empty)
+    nexts (S, T) i32 — the token observed after that context
+    hist  (S, ctx) i32 — the slot's most recent ctx tokens, -1-padded;
+          always ends with the slot's current last_tok"""
+    keys: jax.Array
+    nexts: jax.Array
+    hist: jax.Array
+
+
+def empty_state(num_slots: int) -> DraftState:
+    """Zero-width placeholder keeping SlotState's pytree structure stable
+    when speculation is off."""
+    return DraftState(jnp.zeros((num_slots, 0), jnp.uint32),
+                      jnp.zeros((num_slots, 0), jnp.int32),
+                      jnp.zeros((num_slots, 0), jnp.int32))
+
+
+class Drafter(Protocol):
+    """What the engine needs from a drafter.  All methods are traced
+    inside the jit'd tick/admit; state must be a fixed-shape pytree.
+    A future model-based drafter (2-bit BRAMAC draft model) plugs in
+    here — `observe` would be a no-op and `propose` a forward pass."""
+
+    def init_state(self, num_slots: int): ...
+
+    def reset(self, state, mask): ...
+
+    def observe(self, state, tokens, mask): ...
+
+    def propose(self, state, draft_len: int): ...
+
+
+@dataclasses.dataclass(frozen=True)
+class NGramDrafter:
+    """Prompt-lookup / n-gram self-speculation.
+
+    A direct-mapped table of `table` buckets per slot maps the hash of
+    the last `ngram - 1` tokens to the token that followed it last time
+    (last write wins).  Lookups verify the stored full hash; a miss
+    falls back to repeating the most recent token — which makes heavily
+    repetitive streams (the speculative sweet spot) draftable even
+    before their transitions are tabled."""
+    ngram: int = 2
+    table: int = 512
+
+    @property
+    def ctx(self) -> int:
+        return self.ngram - 1
+
+    def init_state(self, num_slots: int) -> DraftState:
+        return DraftState(
+            jnp.zeros((num_slots, self.table), jnp.uint32),
+            jnp.zeros((num_slots, self.table), jnp.int32),
+            jnp.full((num_slots, self.ctx), -1, jnp.int32))
+
+    def reset(self, ds: DraftState, mask) -> DraftState:
+        """Clear the slots in `mask` (S,) bool — a new request must not
+        inherit its slot's previous occupant's transitions."""
+        m = mask[:, None]
+        return DraftState(jnp.where(m, jnp.uint32(0), ds.keys),
+                          jnp.where(m, 0, ds.nexts),
+                          jnp.where(m, -1, ds.hist))
+
+    def observe(self, ds: DraftState, tokens, mask) -> DraftState:
+        """Feed observed tokens (S, L) i32 in window order; mask (S, L)
+        bool selects the real entries per slot.  Inserts one transition
+        (hash(hist) -> token) per observed token and shifts the history
+        — a sequential scan, so same-bucket collisions resolve
+        last-write-wins deterministically (invariant A5)."""
+        S, T = tokens.shape[0], self.table
+        rows = jnp.arange(S)
+
+        def step(st, tm):
+            tok, m = tm
+            h = ngram_hash(st.hist)                        # (S,)
+            idx = (h % T).astype(jnp.int32)
+            tgt = jnp.where(m, idx, T)                     # T -> dropped
+            keys = st.keys.at[rows, tgt].set(h, mode="drop")
+            nexts = st.nexts.at[rows, tgt].set(tok, mode="drop")
+            hist = jnp.where(
+                m[:, None],
+                jnp.concatenate([st.hist[:, 1:], tok[:, None]], axis=1),
+                st.hist)
+            return DraftState(keys, nexts, hist), None
+
+        ds, _ = jax.lax.scan(step, ds, (tokens.T, mask.T))
+        return ds
+
+    def propose(self, ds: DraftState, draft_len: int):
+        """Chain `draft_len` table lookups from each slot's history.
+        Read-only: speculative continuations are never inserted (only
+        verified emissions are, via observe).  Returns (S, draft_len)
+        i32 drafts."""
+        S, T = ds.hist.shape[0], self.table
+        rows = jnp.arange(S)
+
+        def step(hist, _):
+            h = ngram_hash(hist)
+            idx = (h % T).astype(jnp.int32)
+            hit = ds.keys[rows, idx] == h
+            g = jnp.where(hit, ds.nexts[rows, idx], hist[:, -1])
+            hist = jnp.concatenate([hist[:, 1:], g[:, None]], axis=1)
+            return hist, g
+
+        _, gs = jax.lax.scan(step, ds.hist, None, length=draft_len)
+        return gs.T                                        # (S, draft_len)
+
+
+def rollback_dense(caches, kv_flags, positions, write_mask, max_seq: int):
+    """Zero rejected speculative rows in the dense layout (invariant A4).
+
+    positions (S, L) holds the rejected rows' absolute positions (the
+    caller routes kept rows to max_seq, which drops); kv_flags is
+    model.cache_pool_flags(cfg) — True exactly at the attention KV
+    leaves, whose dense shape is (n_periods, S, max_seq, ...)."""
+    ok = write_mask[:, None] & (positions < max_seq)
+    pos = jnp.where(ok, positions, max_seq)
+    rows = jnp.arange(positions.shape[0])[:, None]
+
+    def zero(leaf, flag):
+        if not flag:
+            return leaf
+        return leaf.at[:, rows, pos].set(0, mode="drop")
+
+    return jax.tree_util.tree_map(zero, caches, kv_flags)

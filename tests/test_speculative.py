@@ -1,0 +1,337 @@
+"""Self-speculative decoding (runtime/speculate.py + sampling.spec_verify
++ the engine's speculative tick).
+
+The load-bearing contract is invariant A1: under greedy sampling the
+emitted streams are bit-identical to non-speculative decoding — whatever
+the drafter proposes, however many drafts get rejected, wherever the
+rejection lands relative to a page boundary.  This file proves it across
+{spec on, off} x {paged, dense} x {prefix cache on, off} on the gqa, mla
+and int8-KV cache architectures, with `check_invariants=True` so every
+speculative rollback round also re-proves the HostPool mirror == device
+allocator equality.  The drafter itself is property-tested against a
+pure-Python replay (invariant A5: the device table is deterministic,
+last-write-wins), and the accept rule is unit-tested directly on both the
+greedy and rejection-sampling paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.configs import get_config
+from repro.models import model as M
+from repro.runtime import speculate as spc
+from repro.runtime import sampling as smp
+from repro.runtime.serve import Engine
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = {
+    "gqa": ("granite-8b", {}),
+    "mla": ("minicpm3-4b", {}),
+    "int8kv": ("granite-8b", {"quant_kv": True}),
+}
+
+_CACHE = {}
+
+
+def _setup(name):
+    if name not in _CACHE:
+        arch, over = ARCHS[name]
+        cfg = get_config(arch, smoke=True)
+        if over:
+            cfg = cfg.replace(**over)
+        _CACHE[name] = (cfg, M.init_params(cfg, jax.random.PRNGKey(0)))
+    return _CACHE[name]
+
+
+# --- drafter vs pure-Python reference (invariant A5) ------------------------
+
+def _ref_fnv(ctx):
+    h = spc.FNV_OFFSET
+    for t in ctx:
+        h = ((h ^ (int(t) + 1)) * spc.FNV_PRIME) & 0xFFFFFFFF
+    return h
+
+
+def _ref_replay(tokens, ngram, table):
+    """Reference table build: feed tokens in order, last write wins."""
+    keys = [0] * table
+    nexts = [0] * table
+    hist = [-1] * (ngram - 1)
+    for t in tokens:
+        h = _ref_fnv(hist)
+        idx = h % table
+        keys[idx] = h
+        nexts[idx] = int(t)
+        hist = hist[1:] + [int(t)]
+    return keys, nexts, hist
+
+
+def _ref_propose(keys, nexts, hist, table, draft_len):
+    hist = list(hist)
+    out = []
+    for _ in range(draft_len):
+        h = _ref_fnv(hist)
+        idx = h % table
+        g = nexts[idx] if keys[idx] == h else hist[-1]
+        out.append(g)
+        hist = hist[1:] + [g]
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n=st.integers(1, 40),
+       ngram=st.integers(2, 4),
+       table=st.sampled_from([8, 64]))
+def test_ngram_table_matches_reference_replay(seed, n, ngram, table):
+    """Device observe/propose bit-match the pure-Python replay — including
+    bucket collisions (table=8 forces them), so the scan's last-write-wins
+    ordering is what actually lands (a duplicate-index scatter would be
+    nondeterministic here)."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, 50, size=n)
+    dr = spc.NGramDrafter(ngram=ngram, table=table)
+    ds = dr.init_state(1)
+    ds = dr.observe(ds, jnp.asarray(toks[None], jnp.int32),
+                    jnp.ones((1, n), bool))
+    keys, nexts, hist = _ref_replay(toks, ngram, table)
+    assert np.asarray(ds.keys)[0].tolist() == keys
+    assert np.asarray(ds.nexts)[0].tolist() == nexts
+    assert np.asarray(ds.hist)[0].tolist() == hist
+    drafts = np.asarray(dr.propose(ds, 4))[0].tolist()
+    assert drafts == _ref_propose(keys, nexts, hist, table, 4)
+
+
+def test_ngram_observe_mask_and_reset():
+    """Masked positions must not insert or shift history, and reset must
+    clear exactly the masked slots."""
+    dr = spc.NGramDrafter(ngram=2, table=16)
+    ds = dr.observe(dr.init_state(2),
+                    jnp.asarray([[3, 4, 5], [3, 9, 5]], jnp.int32),
+                    jnp.asarray([[True, True, True],
+                                 [True, False, True]]))
+    # slot 1 skipped token 9: its table equals replaying [3, 5]
+    k0, n0, h0 = _ref_replay([3, 4, 5], 2, 16)
+    k1, n1, h1 = _ref_replay([3, 5], 2, 16)
+    assert np.asarray(ds.keys)[0].tolist() == k0
+    assert np.asarray(ds.keys)[1].tolist() == k1
+    assert np.asarray(ds.nexts)[1].tolist() == n1
+    assert np.asarray(ds.hist).tolist() == [h0, h1]
+    ds = dr.reset(ds, jnp.asarray([True, False]))
+    assert not np.asarray(ds.keys)[0].any()
+    assert np.asarray(ds.hist)[0].tolist() == [-1]
+    assert np.asarray(ds.keys)[1].tolist() == k1   # untouched
+
+
+# --- the accept rule (sampling.spec_verify) ---------------------------------
+
+def test_greedy_verify_emits_only_argmax_tokens():
+    """A1 at the unit level: every token spec_verify emits IS the argmax
+    of its verify logits, and n_acc counts exactly the leading drafts that
+    match the previous position's argmax — so no draft the sequential
+    greedy loop would not have produced can ever be emitted."""
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(4, 5, 32)), jnp.float32)
+    t = np.argmax(np.asarray(logits), axis=-1)
+    drafts = np.where(rng.random((4, 4)) < 0.5, t[:, :4],
+                      rng.integers(0, 32, (4, 4))).astype(np.int32)
+    keys = jnp.zeros((4, 2), jnp.uint32)
+    out, n_acc, keys2 = smp.spec_verify(logits, jnp.asarray(drafts), keys,
+                                        smp.SamplingConfig())
+    assert np.array_equal(np.asarray(out), t)      # argmax everywhere
+    assert np.array_equal(np.asarray(keys2), np.asarray(keys))  # no RNG
+    for b in range(4):
+        n = 0
+        while n < 4 and drafts[b, n] == t[b, n]:
+            n += 1
+        assert int(n_acc[b]) == n
+
+
+def test_stochastic_verify_edge_probabilities():
+    """Rejection sampling edges: a draft carrying ~all probability mass is
+    always accepted; a draft with zero mass is never accepted and never
+    re-emitted by the residual draw."""
+    B, L, V = 3, 4, 16
+    sure = np.full((B, L, V), -30.0, np.float32)
+    sure[..., 7] = 30.0                          # p(7) ~ 1 everywhere
+    drafts = jnp.full((B, L - 1), 7, jnp.int32)
+    keys = jax.vmap(jax.random.PRNGKey)(jnp.arange(B))
+    sc = smp.SamplingConfig(method="temperature", temperature=1.0)
+    out, n_acc, _ = smp.spec_verify(jnp.asarray(sure), drafts, keys, sc)
+    assert np.all(np.asarray(n_acc) == L - 1)
+    assert np.all(np.asarray(out) == 7)
+    # now the draft token has zero mass: never accepted, and the residual
+    # categorical (draft masked to -inf) can never return it either
+    rng = np.random.default_rng(1)
+    logits = rng.normal(size=(B, L, V)).astype(np.float32)
+    logits[..., 3] = -np.inf                     # p(3) = 0
+    drafts = jnp.full((B, L - 1), 3, jnp.int32)
+    out, n_acc, _ = smp.spec_verify(jnp.asarray(logits), drafts, keys, sc)
+    assert np.all(np.asarray(n_acc) == 0)
+    assert not np.any(np.asarray(out) == 3)
+
+
+# --- engine-level greedy parity (invariant A1) ------------------------------
+
+def _serve(cfg, params, jobs, **kw):
+    """Staggered submissions (each runs to completion before the next) so
+    slot reuse, drafter resets and warm prefix admissions all happen."""
+    eng = Engine(cfg, params, num_slots=2, max_seq=64,
+                 check_invariants=True, **kw)
+    outs = []
+    for prompt, n in jobs:
+        r = eng.submit(prompt, n)
+        eng.run()
+        assert r.done
+        outs.append(r.out_tokens)
+    return outs, eng
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_spec_parity_layouts_and_prefix(name):
+    """Greedy streams bit-identical across {spec on, off} x {paged, dense}
+    x {prefix cache on, off}.  Prompts are repetitive so the n-gram
+    drafter reaches real acceptance (otherwise the rollback path would
+    never run), and a shared system prefix makes the warm-prefix + spec
+    combination actually share pages."""
+    cfg, params = _setup(name)
+    rng = np.random.default_rng(0)
+    sys_p = list(rng.integers(1, cfg.vocab_size, 16))
+    jobs = [(sys_p + list(rng.integers(1, cfg.vocab_size, 4)) * 3, 20),
+            (sys_p + list(rng.integers(1, cfg.vocab_size, 5)) * 2, 18),
+            (sys_p + list(rng.integers(1, cfg.vocab_size, 4)) * 3, 16)]
+    base, _ = _serve(cfg, params, jobs, kv_layout="dense")
+    accepted = 0
+    for kw in ({"kv_layout": "dense"},
+               {"kv_layout": "paged", "prefix_cache": True},
+               {"kv_layout": "paged", "prefix_cache": False}):
+        outs, eng = _serve(cfg, params, jobs, draft_len=4, **kw)
+        assert outs == base, kw
+        stats = eng.spec_stats()
+        assert stats["enabled"] and stats["drafted"] > 0
+        accepted += stats["accepted"]
+    # identical engines accept identically; at least one window must have
+    # accepted a draft or this test never exercised rollback-after-accept
+    assert accepted > 0
+
+
+def test_spec_midwindow_rejection_spans_page_boundary():
+    """A draft window that straddles a page boundary and rejects mid-draft
+    must roll the partially-written second page back cleanly: the final
+    paged KV pool bit-matches a non-speculative engine's pool (rejected
+    rows return to exact zeros), with check_invariants re-proving the
+    allocator mirror after every rollback round."""
+    cfg, params = _setup("gqa")
+    ps = cfg.page_size
+    # position ps-2 at admission: the first draft window [ps-2 .. ps+2]
+    # crosses the page-0/page-1 boundary immediately
+    prompt = list(np.random.default_rng(3).integers(1, cfg.vocab_size,
+                                                    ps - 2))
+    budget = ps + 4
+
+    def engine(**kw):
+        eng = Engine(cfg, params, num_slots=1, max_seq=4 * ps,
+                     kv_layout="paged", prefix_cache=False,
+                     check_invariants=True, **kw)
+        r = eng.submit(prompt, budget)
+        eng.run()
+        assert r.done
+        return r.out_tokens, eng
+
+    base, e0 = engine()
+    spec, e1 = engine(draft_len=5)
+    assert spec == base
+    # same grants, same writes, zeroed rejections -> bitwise-equal pools
+    # (float KV leaves are zero-init, so a rolled-back row == a never-
+    # written row)
+    for a, b in zip(jax.tree_util.tree_leaves(e0.caches),
+                    jax.tree_util.tree_leaves(e1.caches)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spec_stop_budget_and_ceiling_inside_window():
+    """Termination parity (A3) when the boundary lands mid-window: a stop
+    token inside an accepted run, a budget smaller than the window, and a
+    max_seq ceiling crossing the window must all cut the stream exactly
+    where sequential decoding would."""
+    cfg, params = _setup("gqa")
+    prompt = [5, 9, 5, 9, 5, 9, 5, 9]
+    ref_eng = Engine(cfg, params, num_slots=1, max_seq=64)
+    rr = ref_eng.submit(prompt, 24)
+    ref_eng.run()
+    ref = rr.out_tokens
+    # stop token chosen from mid-stream; speculation must truncate there
+    stop = ref[len(ref) // 2]
+    want = ref[:ref.index(stop) + 1]
+    eng = Engine(cfg, params, num_slots=1, max_seq=64, draft_len=6,
+                 check_invariants=True)
+    r = eng.submit(prompt, 24, stop_tokens=(stop,))
+    eng.run()
+    assert r.out_tokens == want and r.result.finish_reason == "eos"
+    # budget not a multiple of the window
+    eng = Engine(cfg, params, num_slots=1, max_seq=64, draft_len=6,
+                 check_invariants=True)
+    r = eng.submit(prompt, 9)
+    eng.run()
+    assert r.out_tokens == ref[:9] and r.result.finish_reason == "budget"
+    # max_seq ceiling: ask for more than fits; clamped at submit, finishes
+    # with reason "max_seq", stream still bit-matches the reference
+    eng = Engine(cfg, params, num_slots=1, max_seq=24, draft_len=6,
+                 check_invariants=True)
+    r = eng.submit(prompt, 100)
+    eng.run()
+    assert r.out_tokens == ref[:24 - len(prompt)]
+    assert r.result.finish_reason == "max_seq"
+
+
+def test_recurrent_arch_opts_out_silently():
+    """Recurrent-hybrid state cannot rewind a rejected draft: requesting
+    speculation must not fail — it is silently disabled and the streams
+    are identical to a spec-less engine."""
+    cfg = get_config("jamba-1.5-large-398b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = list(np.random.default_rng(0).integers(1, cfg.vocab_size, 6))
+
+    def serve(**kw):
+        eng = Engine(cfg, params, num_slots=1, max_seq=32, **kw)
+        r = eng.submit(prompt, 8)
+        eng.run()
+        return r.out_tokens, eng
+
+    base, _ = serve()
+    spec, eng = serve(draft_len=4)
+    assert spec == base
+    assert eng.draft_len == 0
+    st = eng.spec_stats()
+    assert not st["enabled"] and st["drafted"] == 0
+
+
+def test_spec_stochastic_streams_terminate_and_count():
+    """The rejection-sampling path emits exactly the asked number of
+    tokens and the drafted/accepted counters stay coherent (accepted <=
+    drafted; per-request counters sum to the engine totals).  A request's
+    stochastic speculative stream is keyed by its seed alone, so it
+    reproduces across engines and co-batched traffic."""
+    cfg, params = _setup("gqa")
+    prompt = [7, 3, 7, 3, 7, 3]
+    eng = Engine(cfg, params, num_slots=2, max_seq=64, draft_len=4,
+                 sampling="top_k", top_k=8, temperature=0.8,
+                 check_invariants=True)
+    rs = [eng.submit(prompt, 15, seed=s) for s in (1, 2, 3)]
+    results = eng.run()
+    assert len(results) == 3
+    for res in results:
+        assert len(res.tokens) == 15
+        assert 0 <= res.accepted_tokens <= res.drafted_tokens
+    st = eng.spec_stats()
+    assert st["drafted"] == sum(r.drafted_tokens for r in results)
+    assert st["accepted"] == sum(r.accepted_tokens for r in results)
+    # reproducibility: same seed -> same stochastic speculative stream,
+    # alone in a fresh engine vs co-batched above
+    eng2 = Engine(cfg, params, num_slots=2, max_seq=64, draft_len=4,
+                  sampling="top_k", top_k=8, temperature=0.8)
+    r2 = eng2.submit(prompt, 15, seed=2)
+    eng2.run()
+    assert r2.result.tokens == rs[1].result.tokens
