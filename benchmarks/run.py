@@ -404,11 +404,15 @@ def bench_serve(fast=False):
 
 def bench_paged(fast=False):
     """Paged (block-table) KV cache vs the dense per-slot reservation at
-    equal traffic: wall-time tok/s for both layouts, plus a deterministic
-    record asserting (a) greedy streams are bit-identical across layouts
-    and (b) the paged pool's pages-in-use high-water sits strictly below
-    the dense `num_slots * max_seq` reservation — the BRAMAC small-fixed-
-    array utilization argument applied to serving memory."""
+    equal traffic: wall-time tok/s for both layouts plus the pallas
+    paged-decode kernel ("kernel": paged layout, block-table walks instead
+    of max_seq gathers), a KV-read GB/s wall row for the kernel engine
+    (the maxtext decode-microbenchmark currency), and two deterministic
+    records asserting (a) greedy streams are bit-identical across all
+    three paths, (b) the paged pool's pages-in-use high-water sits
+    strictly below the dense `num_slots * max_seq` reservation, and
+    (c) the kernel's per-decode-step KV bytes scale with live tokens —
+    strictly below the gather oracle's max_seq-proportional traffic."""
     import jax
     import numpy as np
 
@@ -424,27 +428,35 @@ def bench_paged(fast=False):
     prompts = [rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 20)))
                for _ in range(R)]
     stats = {}
-    for layout in ("dense", "paged"):
+    for name in ("dense", "paged", "kernel"):
+        kw = {"kv_layout": "paged", "decode_kernel": True} \
+            if name == "kernel" else {"kv_layout": name}
         with Engine(cfg, params, num_slots=slots, max_seq=max_seq,
-                    decode_steps=dsteps, kv_layout=layout) as eng:
+                    decode_steps=dsteps, **kw) as eng:
             eng.submit(prompts[0][:4], dsteps + 1)     # compile warmup
             eng.run()
             dt = float("inf")
             for _ in range(3):
                 eng.pages_high_water = eng.pages_in_use
+                b0, s0 = eng.kv_bytes_read, eng.kv_read_steps
                 reqs = [eng.submit(p, T) for p in prompts]
                 t0 = time.perf_counter()
                 eng.run()
                 dt = min(dt, time.perf_counter() - t0)
+                # identical schedule every round -> identical deltas
+                kv_bytes = eng.kv_bytes_read - b0
+                kv_steps = eng.kv_read_steps - s0
             toks = sum(len(r.out_tokens) for r in reqs)
-            stats[layout] = {"dt": dt, "toks": toks,
-                             "streams": [r.out_tokens for r in reqs],
-                             "hw": eng.pages_high_water,
-                             "pages": eng.num_pages,
-                             "page_size": eng.page_size}
-            _row(f"serve_{layout}_s{slots}_n{dsteps}_r{R}x{T}",
+            stats[name] = {"dt": dt, "toks": toks,
+                           "streams": [r.out_tokens for r in reqs],
+                           "hw": eng.pages_high_water,
+                           "pages": eng.num_pages,
+                           "page_size": eng.page_size,
+                           "kv_bytes": kv_bytes,
+                           "kv_steps": kv_steps}
+            _row(f"serve_{name}_s{slots}_n{dsteps}_r{R}x{T}",
                  dt * 1e6 / toks, f"{toks / dt:.0f} tok/s")
-    d, p = stats["dense"], stats["paged"]
+    d, p, k = stats["dense"], stats["paged"], stats["kernel"]
     dense_rows = slots * max_seq
     hw_rows = p["hw"] * p["page_size"]
     _row(f"paged_highwater_s{slots}_r{R}x{T}", 0.0,
@@ -452,6 +464,18 @@ def bench_paged(fast=False):
          f"highwater {p['hw']}/{p['pages']} pages = {hw_rows} rows "
          f"vs dense {dense_rows} rows "
          f"(below={hw_rows < dense_rows})", deterministic=True)
+    # per-decode-step KV bytes: engine accounting (tick-start lengths,
+    # deterministic given the fixed schedule); GB/s is wall-dependent and
+    # lands as a tolerance-gated wall row
+    kb = k["kv_bytes"] / k["kv_steps"]
+    ob = p["kv_bytes"] / p["kv_steps"]
+    _row(f"paged_kernel_gbps_s{slots}_r{R}x{T}",
+         k["dt"] * 1e6 / k["toks"],
+         f"{k['kv_bytes'] / k['dt'] / 1e9:.3f} GB/s KV read")
+    _row(f"paged_kv_bytes_s{slots}_r{R}x{T}", 0.0,
+         f"streams_equal={k['streams'] == p['streams']} "
+         f"kernel {kb:.0f} B/step vs gather {ob:.0f} B/step "
+         f"(below={kb < ob})", deterministic=True)
 
 
 # --- Prefix cache: warm-vs-cold TTFT + page sharing -------------------------

@@ -2,9 +2,11 @@
 # Tier-1 CI entry point, staged:
 #
 #   lint        python -m pyflakes src tests benchmarks scripts
-#               (reports SKIP — loudly, in the summary — when pyflakes
-#               isn't installed; it used to report PASS, which hid that
-#               lint had never actually run in the offline container.
+#               (covers src/repro/kernels — bramac_matmul, ops and the
+#               paged_attention decode kernel — alongside the rest of the
+#               tree.  Reports SKIP — loudly, in the summary — when
+#               pyflakes isn't installed, but still runs a syntax-only
+#               compileall pass so new modules are checked offline.
 #               `pip install .[dev]` provides pyflakes.)
 #   tests       full pytest suite minus `multidevice`, then the marked
 #               multidevice subset in ONE 8-virtual-device pass
@@ -37,7 +39,11 @@ stage_lint() {
     if python -c "import pyflakes" 2>/dev/null; then
         python -m pyflakes src tests benchmarks scripts
     else
-        echo "pyflakes not installed (pip install .[dev]) — lint skipped"
+        # pyflakes missing (offline container): fall back to a syntax-only
+        # pass so newly added modules still get checked, then report SKIP
+        # so the summary shows real lint never ran
+        python -m compileall -q src tests benchmarks scripts || return 1
+        echo "pyflakes not installed (pip install .[dev]) — syntax-only pass"
         return $SKIP_RC
     fi
 }

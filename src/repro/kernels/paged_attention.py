@@ -1,0 +1,317 @@
+"""Pallas paged-attention decode kernel: block-table walks, not gathers.
+
+The serving oracle (`attention.paged_view` + `chunk_attention`) materializes
+a dense ``(B, max_seq, ...)`` copy of every sequence's pages before
+attending, so per-decode-step memory traffic is proportional to ``max_seq``
+even for ten-token sequences.  This kernel applies the paper's
+small-fixed-array discipline to the decode hot loop: each grid step owns one
+sequence, walks that sequence's block table directly, and DMAs one
+``(page_size, Hkv, hd)`` K/V tile at a time from the pool into a fixed VMEM
+scratch buffer, combining pages with an online softmax.
+
+Kernel invariants (the contract the parity suite pins):
+
+* **Page-bounded gathers** — the page loop runs ``min(n_pages[b],
+  ceil(length[b] / page_size))`` iterations, never ``max_seq / page_size``:
+  per-step HBM traffic is proportional to the sequence's *live* tokens.
+  Table entries at or beyond ``n_pages`` are never read.
+* **Online-softmax exactness contract** — scores are computed in fp32 with
+  the oracle's exact masking rule (rows at or past ``length`` replaced by
+  -1e30 before the running max), and pages are combined with a running
+  max + rescaled accumulator.  Outputs match the gather oracle to float
+  reassociation error (the sum is associated per-page instead of once over
+  ``max_seq``); greedy token streams are asserted bit-identical in
+  tests/test_paged_attention_kernel.py.
+* **Masks honored** — the kernel is read-only: ownership (`owned`), write
+  (`write_mask`) and speculative (`bound`) masks are write-side concerns
+  enforced by `attention.paged_update` before the kernel ever runs, so a
+  tile read through the table sees exactly the rows those masks admitted.
+  A sequence with ``n_pages == 0`` (free slot) reads nothing and returns
+  zeros.
+* **int8 KV stays int8** — the quantized variant loads int8 K/V tiles plus
+  their per-row scales and dequantizes *in-kernel* on the one resident
+  tile; no fp copy of the cache is ever materialized (the oracle's
+  `decode_attention_q` contract, minus its probability requantization —
+  see `paged_decode_q`).
+
+Dispatch follows `kernels/ops.py`: interpret mode is resolved per call via
+`_interpret()` and enters the jit cache as a static argument, so the suite
+runs the same kernel code on CPU.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.ops import _interpret
+
+# jax renamed TPUCompilerParams -> CompilerParams across versions; alias
+# whichever this container ships (same guard as kernels/bramac_matmul.py).
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
+
+def _online_update(carry, s, v_tile):
+    """One page's online-softmax step: fold fp32 scores ``s`` (Hkv, g, ps)
+    and the fp32 value tile ``v_tile`` (Hkv, ps, hd) into the running
+    (max, normalizer, accumulator) carry."""
+    m, l, acc = carry
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l = l * corr + jnp.sum(p, axis=-1)
+    pv = jax.lax.dot_general(p, v_tile, (((2,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    return m_new, l, acc * corr[..., None] + pv
+
+
+def _finish(out_ref, carry, H, hd):
+    m, l, acc = carry
+    l = jnp.where(l > 0, l, 1.0)        # free slot (no pages): emit zeros
+    out_ref[0] = (acc / l[..., None]).reshape(H, hd).astype(out_ref.dtype)
+
+
+def _fp_kernel(tables_ref, n_ref, len_ref, q_ref, k_hbm, v_hbm, out_ref,
+               k_scr, v_scr, sems, *, page_size, hkv):
+    H, hd = q_ref.shape[1], q_ref.shape[2]
+    g, ps = H // hkv, page_size
+    q = q_ref[0].astype(jnp.float32).reshape(hkv, g, hd)
+    L = len_ref[0]
+    n_eff = jnp.minimum(n_ref[0], (L + ps - 1) // ps)
+
+    def body(j, carry):
+        pid = tables_ref[0, j]
+        ck = pltpu.make_async_copy(k_hbm.at[pid], k_scr, sems.at[0])
+        cv = pltpu.make_async_copy(v_hbm.at[pid], v_scr, sems.at[1])
+        ck.start()
+        cv.start()
+        ck.wait()
+        cv.wait()
+        kt = k_scr[...].astype(jnp.float32).transpose(1, 0, 2)  # (Hkv,ps,hd)
+        vt = v_scr[...].astype(jnp.float32).transpose(1, 0, 2)
+        s = jax.lax.dot_general(q, kt, (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        s = s / math.sqrt(hd)
+        rows = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ps), 2)
+        s = jnp.where(rows < L, s, -1e30)       # the oracle's masking rule
+        return _online_update(carry, s, vt)
+
+    carry = (jnp.full((hkv, g), -jnp.inf, jnp.float32),
+             jnp.zeros((hkv, g), jnp.float32),
+             jnp.zeros((hkv, g, hd), jnp.float32))
+    carry = jax.lax.fori_loop(0, n_eff, body, carry)
+    _finish(out_ref, carry, H, hd)
+
+
+def _q_kernel(tables_ref, n_ref, len_ref, q_ref, qs_ref, k_hbm, ks_hbm,
+              v_hbm, vs_hbm, out_ref, k_scr, ks_scr, v_scr, vs_scr, sems,
+              *, page_size, hkv):
+    """int8 variant: reproduces `decode_attention_q`'s arithmetic — int8
+    score dot with the K row scales factored out, fp32 softmax, V row
+    scales folded into the probabilities, probabilities *requantized* to
+    int8 for an integer PV dot — with three page walks instead of one
+    gather (max, then normalizer + probability row scale at the exact
+    final max, then the quantized accumulation).  The extra walks keep
+    every partial bit-comparable to the oracle: only the normalizer's
+    float association order differs.  Traffic stays proportional to live
+    tokens; no fp copy of the cache is ever materialized."""
+    H, hd = q_ref.shape[1], q_ref.shape[2]
+    g, ps = H // hkv, page_size
+    q = q_ref[0].astype(jnp.float32).reshape(hkv, g, hd)   # int8 -> f32
+    qs = qs_ref[0].reshape(hkv, g)                         # per-row q scales
+    L = len_ref[0]
+    n_eff = jnp.minimum(n_ref[0], (L + ps - 1) // ps)
+
+    def load_scores(j):
+        """DMA page j's tiles; masked fp32 scores (Hkv, g, ps) exactly as
+        the oracle computes them, plus the resident int8 V tile and its
+        row scales."""
+        pid = tables_ref[0, j]
+        cps = [pltpu.make_async_copy(src.at[pid], dst, sems.at[i])
+               for i, (src, dst) in enumerate(
+                   ((k_hbm, k_scr), (ks_hbm, ks_scr),
+                    (v_hbm, v_scr), (vs_hbm, vs_scr)))]
+        for c in cps:
+            c.start()
+        for c in cps:
+            c.wait()
+        kt = k_scr[...].transpose(1, 0, 2)                      # (Hkv,ps,hd)
+        kst = ks_scr[...].transpose(1, 0)                       # (Hkv,ps)
+        s = jax.lax.dot_general(q, kt.astype(jnp.float32),
+                                (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        s = s * qs[..., None] * kst[:, None, :] / math.sqrt(hd)
+        rows = j * ps + jax.lax.broadcasted_iota(jnp.int32, (1, 1, ps), 2)
+        s = jnp.where(rows < L, s, -1e30)
+        vst = vs_scr[...].transpose(1, 0)                       # (Hkv,ps)
+        return s, v_scr[...].transpose(1, 0, 2), vst
+
+    def max_body(j, m):
+        s, _, _ = load_scores(j)
+        return jnp.maximum(m, jnp.max(s, axis=-1))
+
+    m = jax.lax.fori_loop(0, n_eff, max_body,
+                          jnp.full((hkv, g), -jnp.inf, jnp.float32))
+
+    def norm_body(j, carry):
+        l, u = carry
+        s, _, vst = load_scores(j)
+        p = jnp.exp(s - m[..., None])
+        return l + jnp.sum(p, axis=-1), \
+            jnp.maximum(u, jnp.max(p * vst[:, None, :], axis=-1))
+
+    l, u = jax.lax.fori_loop(0, n_eff, norm_body,
+                             (jnp.zeros((hkv, g), jnp.float32),
+                              jnp.zeros((hkv, g), jnp.float32)))
+    l = jnp.where(l > 0, l, 1.0)        # free slot (no pages): emit zeros
+    # _quant_rows' scale over the probability row (probs * V row scales)
+    pscale = jnp.maximum(u / l, 1e-6) / 127.0
+
+    def acc_body(j, acc):
+        s, vt, vst = load_scores(j)
+        p = jnp.exp(s - m[..., None]) / l[..., None] * vst[:, None, :]
+        pq = jnp.clip(jnp.round(p / pscale[..., None]),
+                      -127, 127).astype(jnp.int32)
+        return acc + jax.lax.dot_general(
+            pq, vt.astype(jnp.int32), (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.int32)
+
+    acc = jax.lax.fori_loop(0, n_eff, acc_body,
+                            jnp.zeros((hkv, g, hd), jnp.int32))
+    out = acc.astype(jnp.float32) * pscale[..., None]
+    out_ref[0] = out.reshape(H, hd).astype(out_ref.dtype)
+
+
+def _scalar_specs(max_pages):
+    """SMEM specs for (tables, n_pages, lengths) — one sequence's row."""
+    return [pl.BlockSpec((1, max_pages), lambda b: (b, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b: (b,), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b: (b,), memory_space=pltpu.SMEM)]
+
+
+def paged_decode(q, k_pool, v_pool, tables, n_pages, lengths):
+    """Decode attention straight off the paged pool (fp K/V).
+
+    q: (B, H, hd) roped queries; pools: (P, page_size, Hkv, hd);
+    tables: (B, max_pages) i32; n_pages: (B,) i32; lengths: (B,) i32 rows
+    each query attends (``position + 1``).  Returns (B, H, hd) in q.dtype.
+    """
+    return _paged_decode(q, k_pool, v_pool, tables, n_pages, lengths,
+                         interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _paged_decode(q, k_pool, v_pool, tables, n_pages, lengths, *, interpret):
+    B, H, hd = q.shape
+    ps, Hkv = k_pool.shape[1], k_pool.shape[2]
+    kern = functools.partial(_fp_kernel, page_size=ps, hkv=Hkv)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=_scalar_specs(tables.shape[1]) + [
+            pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((ps, Hkv, hd), k_pool.dtype),
+                        pltpu.VMEM((ps, Hkv, hd), v_pool.dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(tables, n_pages, lengths, q, k_pool, v_pool)
+
+
+def paged_decode_q(q_int8, q_scale, k_pool, k_scales, v_pool, v_scales,
+                   tables, n_pages, lengths, out_dtype):
+    """int8-KV decode attention off the quantized pool.
+
+    q_int8/q_scale: (B, H, hd) int8 + (B, H) f32 row-quantized queries
+    (callers quantize with `attention._quant_rows`, exactly as the oracle
+    does); k/v pools: (P, page_size, Hkv, hd) int8 with (P, page_size, Hkv)
+    f32 row scales.  Tolerance note vs `decode_attention_q`: the kernel
+    replays the oracle's arithmetic step for step, including the int8
+    probability requantization before the PV dot (see `_q_kernel`); the
+    only divergence left is the softmax normalizer's float association
+    order (summed per page here, once over max_seq there), so outputs
+    agree to reassociation error and greedy token streams stay identical
+    (asserted in the parity suite)."""
+    return _paged_decode_q(q_int8, q_scale, k_pool, k_scales, v_pool,
+                           v_scales, tables, n_pages, lengths,
+                           out_dtype=jnp.dtype(out_dtype).name,
+                           interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def _paged_decode_q(q_int8, q_scale, k_pool, k_scales, v_pool, v_scales,
+                    tables, n_pages, lengths, *, out_dtype, interpret):
+    B, H, hd = q_int8.shape
+    ps, Hkv = k_pool.shape[1], k_pool.shape[2]
+    kern = functools.partial(_q_kernel, page_size=ps, hkv=Hkv)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=_scalar_specs(tables.shape[1]) + [
+            pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b: (b, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_specs=pl.BlockSpec((1, H, hd), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), out_dtype),
+        scratch_shapes=[pltpu.VMEM((ps, Hkv, hd), jnp.int8),
+                        pltpu.VMEM((ps, Hkv), jnp.float32),
+                        pltpu.VMEM((ps, Hkv, hd), jnp.int8),
+                        pltpu.VMEM((ps, Hkv), jnp.float32),
+                        pltpu.SemaphoreType.DMA((4,))],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(tables, n_pages, lengths, q_int8, q_scale,
+      k_pool, k_scales, v_pool, v_scales)
+
+
+# ---------------------------------------------------------------------------
+# KV bytes-read accounting (the maxtext decode-microbenchmark currency)
+# ---------------------------------------------------------------------------
+
+def kv_row_bytes(cfg) -> int:
+    """Bytes one decode step reads per cached KV row, summed over every
+    layer that owns a paged pool (attn: K+V heads, int8 rows carry their
+    f32 scales; mla: the latent c_kv + k_rope row; xattn/recurrent layers
+    hold no paged pool and contribute nothing)."""
+    itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+    total = 0
+    for spec in cfg.layer_pattern:
+        if "mla" in spec:
+            total += (cfg.kv_lora_rank + cfg.qk_rope_dim) * itemsize
+        elif "attn" in spec and "xattn" not in spec:
+            if getattr(cfg, "quant_kv", False):
+                total += 2 * cfg.num_kv_heads * (cfg.hd + 4)  # int8 + f32
+            else:
+                total += 2 * cfg.num_kv_heads * cfg.hd * itemsize
+    return total * cfg.n_periods
+
+
+def decode_read_rows(lengths, page_size: int) -> int:
+    """Pool rows ONE decode step touches under the kernel: each live
+    sequence reads its allocated pages up to the page holding its last row
+    (``ceil(length / page_size)`` tiles of ``page_size`` rows) — the
+    page-bounded invariant this module exists for.  `lengths` are the live
+    row counts (position + 1) of occupied slots; free slots read nothing."""
+    return sum(-(-int(n) // page_size) * page_size for n in lengths if n > 0)
+
+
+def oracle_read_rows(num_slots: int, max_seq: int) -> int:
+    """Pool rows ONE decode step touches under the gather oracle:
+    `paged_view` materializes all ``num_slots`` tables to ``max_seq`` rows
+    each, live or not — the traffic floor the kernel removes."""
+    return num_slots * max_seq

@@ -7,6 +7,7 @@
         [--sampling top_p --temperature 0.8 --top-p 0.95] \
         [--decode-steps 8] [--prefill-chunk 16] \
         [--kv-layout paged|dense] [--page-size 16] [--num-pages 12] \
+        [--decode-kernel auto|on|off] \
         [--prefix-cache on|off] [--prefix-chunk 16] \
         [--prefix-max-chains 4096] \
         [--draft-len 4 --spec-ngram 2 --spec-table 512]
@@ -87,6 +88,12 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="total pages in the shared pool (0 = capacity-"
                          "equal to dense: slots * ceil(max_seq/page_size))")
+    ap.add_argument("--decode-kernel", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="pallas paged-decode kernel for Sq=1 reads: walks "
+                         "each slot's block table instead of gathering "
+                         "max_seq rows ('auto' = on for a TPU backend, "
+                         "off elsewhere — interpret mode is slow on CPU)")
     ap.add_argument("--prefix-cache", default="on", choices=("on", "off"),
                     help="share cached prompt prefixes across requests "
                          "(paged layout only; recurrent archs opt out; "
@@ -139,7 +146,9 @@ def main():
                                  prefill_chunk=args.prefill_chunk,
                                  seed=args.seed),
         paging=PagingOptions(kv_layout=args.kv_layout,
-                             num_pages=args.num_pages or None),
+                             num_pages=args.num_pages or None,
+                             decode_kernel=None if args.decode_kernel ==
+                             "auto" else args.decode_kernel == "on"),
         prefix=PrefixOptions(enabled=args.prefix_cache == "on",
                              chunk=args.prefix_chunk or None,
                              max_chains=args.prefix_max_chains),
@@ -197,6 +206,11 @@ def main():
                   f"({100 * hw_rows / dense_rows:.0f}% of the dense "
                   f"{dense_rows}-row reservation); "
                   f"{eng.pages_in_use} pages still in use")
+            print(f"  kv reads: decode_kernel="
+                  f"{'on' if eng.decode_kernel else 'off'}, "
+                  f"{eng.kv_bytes_read / max(eng.kv_read_steps, 1):.0f} "
+                  f"bytes/step over {eng.kv_read_steps} decode steps "
+                  f"({'live-token bounded' if eng.decode_kernel else 'max_seq gather'})")
             st = eng.prefix_stats()
             if st["enabled"]:
                 hist = eng.pool.refcount_hist()

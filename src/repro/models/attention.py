@@ -29,6 +29,7 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import paged_attention as pk
 from repro.models.layers import apply_rope, dense, init_dense, init_rmsnorm, rmsnorm
 
 Q_CHUNK = 1024
@@ -64,6 +65,12 @@ class PagedKV:
                window can never write rows a non-speculative run could
                not reach (and `pages.rollback` honours the same bound).
                None means no extra bound (the non-speculative paths).
+    decode_kernel — static bool: route Sq=1 gqa reads through the pallas
+               paged-attention kernel (`kernels/paged_attention.py`), which
+               walks the block table page by page instead of gathering a
+               dense (B, max_seq, …) view.  Writes, mla and Sq>1 chunks
+               (prefill, the speculative verify window) always use the
+               gather oracle, which stays the parity reference.
     """
     tables: jax.Array
     n_pages: jax.Array
@@ -72,6 +79,7 @@ class PagedKV:
     page_size: int
     owned: jax.Array | None = None
     bound: jax.Array | None = None
+    decode_kernel: bool = False
 
 
 @dataclasses.dataclass
@@ -92,8 +100,11 @@ class DenseKV:
 
 def dense_update(cache, new, positions, dv: DenseKV):
     """Scatter `new` (B, S, …) rows into the dense cache (B, max_seq, …)
-    at absolute `positions` (B, S); masked / out-of-range rows drop."""
-    ok = dv.write_mask[:, None] & (positions < dv.max_seq)
+    at absolute `positions` (B, S); masked / out-of-range rows drop.
+
+    Both bounds matter: a negative position would wrap (`.at[]` follows
+    NumPy indexing) and silently alias the tail of a live sequence."""
+    ok = dv.write_mask[:, None] & (positions < dv.max_seq) & (positions >= 0)
     if dv.bound is not None:
         ok &= positions < dv.bound[:, None]
     pos = jnp.where(ok, positions, dv.max_seq)  # max_seq is OOB -> dropped
@@ -105,11 +116,16 @@ def paged_update(pool, new, positions, pv: PagedKV):
     """Scatter `new` (B, S, …) rows at absolute `positions` (B, S) through
     the block table into `pool` ((P, page_size, …)).  Masked / out-of-range
     rows — and rows aimed at a shared (un-owned) page or past the
-    speculative bound — are routed to page id P and dropped."""
+    speculative bound — are routed to page id P and dropped.
+
+    The lower bound is load-bearing: a negative position floor-divides to a
+    negative pg_idx (which passes `< n_pages`), clips to table entry 0, and
+    `% page_size` wraps its row positive — without `positions >= 0` a stray
+    padding row would land inside a live page."""
     P, ps = pool.shape[0], pv.page_size
     pg_idx = positions // ps
     ok = pv.write_mask[:, None] & (pg_idx < pv.n_pages[:, None]) \
-        & (positions < pv.max_seq)
+        & (positions < pv.max_seq) & (positions >= 0)
     if pv.owned is not None:
         ok &= jnp.take_along_axis(
             pv.owned, jnp.clip(pg_idx, 0, pv.tables.shape[1] - 1), axis=1)
@@ -165,9 +181,11 @@ def causal_attention(q, k, v, q_offset=0):
         mask = (jnp.arange(Sk)[None, :] <=
                 (jnp.arange(Sq)[:, None] + q_offset))
         return _attend(q, k, v, mask)
+    # ragged sequences run the full chunks through the scanned body and the
+    # leftover rows (< Q_CHUNK of them) through one extra trailing _attend
     n_chunks = Sq // Q_CHUNK
-    assert Sq % Q_CHUNK == 0, "sequence must be divisible by Q_CHUNK"
-    qc = q.reshape(B, n_chunks, Q_CHUNK, H, hd).swapaxes(0, 1)
+    Sq_full = n_chunks * Q_CHUNK
+    qc = q[:, :Sq_full].reshape(B, n_chunks, Q_CHUNK, H, hd).swapaxes(0, 1)
 
     def body(i, qi):
         offs = q_offset + i * Q_CHUNK
@@ -177,7 +195,14 @@ def causal_attention(q, k, v, q_offset=0):
 
     out = jax.lax.map(lambda args: body(*args),
                       (jnp.arange(n_chunks), qc))
-    return out.swapaxes(0, 1).reshape(B, Sq, H, v.shape[-1])
+    out = out.swapaxes(0, 1).reshape(B, Sq_full, H, v.shape[-1])
+    if Sq_full < Sq:
+        tail = Sq - Sq_full
+        mask = (jnp.arange(Sk)[None, :] <=
+                (jnp.arange(tail)[:, None] + q_offset + Sq_full))
+        out = jnp.concatenate([out, _attend(q[:, Sq_full:], k, v, mask)],
+                              axis=1)
+    return out
 
 
 def decode_attention(q, k_cache, v_cache, pos):
@@ -232,9 +257,19 @@ def gqa(p, x, cfg, positions, cache=None, cache_pos=None, paged=None):
         # decode and prefill chunks both attend the stored int8 rows
         # (earlier chunks only exist quantized) via the same masked path
         new_cache = _update_cache_q(cache, k, v, cache_pos, paged, positions)
-        view = new_cache if not isinstance(paged, PagedKV) else \
-            {key: paged_view(new_cache[key], paged) for key in new_cache}
-        out = decode_attention_q(q, view, positions)
+        if isinstance(paged, PagedKV) and paged.decode_kernel and S == 1:
+            # page-bounded pallas decode: the pool is read as stored int8,
+            # one (page_size, Hkv, hd) tile at a time (q row-quantized
+            # exactly as decode_attention_q would)
+            qq, qs = _quant_rows(q)
+            out = pk.paged_decode_q(
+                qq[:, 0], qs[:, 0], new_cache["k"], new_cache["ks"],
+                new_cache["v"], new_cache["vs"], paged.tables,
+                paged.n_pages, positions[:, 0] + 1, q.dtype)[:, None]
+        else:
+            view = new_cache if not isinstance(paged, PagedKV) else \
+                {key: paged_view(new_cache[key], paged) for key in new_cache}
+            out = decode_attention_q(q, view, positions)
     elif isinstance(paged, DenseKV):
         # speculative dense writes: per-position scatter with drop
         kc = dense_update(cache["k"], k, positions, paged)
@@ -244,8 +279,15 @@ def gqa(p, x, cfg, positions, cache=None, cache_pos=None, paged=None):
     elif paged is not None:
         kc = paged_update(cache["k"], k, positions, paged)
         vc = paged_update(cache["v"], v, positions, paged)
-        out = chunk_attention(q, paged_view(kc, paged),
-                              paged_view(vc, paged), positions)
+        if paged.decode_kernel and S == 1:
+            # page-bounded pallas decode kernel; the gather below stays
+            # the parity oracle (and the Sq>1 prefill/verify path)
+            out = pk.paged_decode(q[:, 0], kc, vc, paged.tables,
+                                  paged.n_pages,
+                                  positions[:, 0] + 1)[:, None]
+        else:
+            out = chunk_attention(q, paged_view(kc, paged),
+                                  paged_view(vc, paged), positions)
         new_cache = {"k": kc, "v": vc}
     else:
         kc = _update_cache(cache["k"], k, cache_pos)

@@ -54,7 +54,11 @@ def forward(params, batch, cfg: ModelConfig, caches=None, cache_pos=None,
     block tables / refcounts / ownership bits come from the engine's
     `runtime.pages.PagePool` allocator state: entries mapped read-only
     (prefix-cache shares) carry owned=False, and the paged scatter drops
-    their writes so shared pages are never corrupted."""
+    their writes so shared pages are never corrupted.  A bundle with
+    decode_kernel=True additionally routes S=1 gqa reads through the
+    pallas paged-decode kernel (kernels/paged_attention.py) — per-step
+    traffic bounded by each sequence's live pages, never max_seq; mla
+    and S>1 chunks keep the gather oracle."""
     x = _inputs_to_hidden(params, batch, cfg)
     B, S = x.shape[:2]
     if cache_pos is not None:

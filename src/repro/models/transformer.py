@@ -88,7 +88,12 @@ def init_block_cache(cfg, spec: str, batch: int, max_seq: int, dtype,
 
 def block_apply(p, x, cfg, spec, *, positions, vision_embeds=None,
                 cache=None, cache_pos=None, paged=None):
-    """Returns (x, aux_loss, new_cache)."""
+    """Returns (x, aux_loss, new_cache).
+
+    `paged` (an attention.PagedKV bundle, threaded untouched from the
+    engine) selects the paged KV discipline inside gqa/mla — including,
+    when its decode_kernel flag is set, the pallas block-table decode
+    kernel for Sq=1 gqa reads (mla always takes the gather oracle)."""
     mixer, ff = parse_spec(spec)
     h = rmsnorm(p["norm1"], x, cfg.norm_eps)
     decode = cache is not None and x.shape[1] == 1

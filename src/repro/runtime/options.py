@@ -63,9 +63,21 @@ class PagingOptions:
     """KV layout: "paged" (shared refcounted page pool) or "dense" (the
     per-slot max_seq reservation kept as the parity oracle).  num_pages
     None means capacity-equal to dense (num_slots * ceil(max_seq /
-    page_size))."""
+    page_size)).
+
+    decode_kernel routes the Sq=1 decode read through the pallas
+    paged-attention kernel (kernels/paged_attention.py): per-step KV
+    traffic walks the block table page by page instead of gathering
+    max_seq rows.  None (default) resolves at engine construction to
+    "on for a real TPU backend, off elsewhere" — interpret-mode pallas
+    inside the fused tick is correct but slow, so CPU runs opt in
+    explicitly (as the parity suite and bench_paged do).  gqa layers use
+    the kernel; mla and the speculative verify window fall back to the
+    gather oracle.  Ignored under kv_layout="dense" and under a mesh
+    (the kernel is not partition-annotated)."""
     kv_layout: str = "paged"
     num_pages: int | None = None
+    decode_kernel: bool | None = None
 
     def __post_init__(self):
         if self.kv_layout not in ("paged", "dense"):
@@ -152,6 +164,7 @@ _LEGACY = {
     "stop_tokens": ("schedule", "stop_tokens"),
     "kv_layout": ("paging", "kv_layout"),
     "num_pages": ("paging", "num_pages"),
+    "decode_kernel": ("paging", "decode_kernel"),
     "prefix_cache": ("prefix", "enabled"),
     "prefix_chunk": ("prefix", "chunk"),
     "prefix_max_chains": ("prefix", "max_chains"),

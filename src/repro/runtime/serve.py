@@ -102,6 +102,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import paged_attention as pk_kernel
 from repro.models import attention as attn
 from repro.models import model as M
 from repro.parallel import sharding as shd
@@ -285,6 +286,18 @@ class Engine:
         # (same tree structure as the paged pool flags)
         self._kv_flags = M.cache_pool_flags(cfg) \
             if self.draft_len and self.kv_layout == "dense" else None
+        # --- pallas decode kernel (Sq=1 paged reads walk the block table
+        # page by page; None = auto: real TPU only — interpret mode on CPU
+        # is correct but slow, so CPU callers opt in).  The speculative
+        # tick verifies Sq=draft+1 windows and keeps the gather oracle, as
+        # does any mesh-sharded engine (the kernel carries no partition
+        # annotations).
+        dk = options.paging.decode_kernel
+        self.decode_kernel = bool(
+            self.kv_layout == "paged" and mesh is None
+            and not self.draft_len
+            and (dk if dk is not None
+                 else jax.default_backend() == "tpu"))
         # --- prefix cache (paged only; recurrent state accumulates over
         # every token, so those archs cannot share prefixes — they opt out
         # silently but stream identically) ---
@@ -322,6 +335,14 @@ class Engine:
         self.n_admit_calls = 0
         self.n_syncs = 0
         self.n_generated = 0
+        # decode KV read accounting (kernels/paged_attention currency):
+        # bytes the decode path reads from the KV cache, accumulated per
+        # tick from the tick-start slot lengths (allocation is fixed
+        # within a tick, so this undercounts each slot by at most one
+        # page over the tick — deterministic given the same schedule).
+        self.kv_bytes_read = 0
+        self.kv_read_steps = 0
+        self._kv_row_bytes = pk_kernel.kv_row_bytes(cfg)
         # engine-lifetime speculation totals (folded in as requests retire)
         self.tokens_drafted = 0
         self.tokens_accepted = 0
@@ -343,12 +364,14 @@ class Engine:
         `owned` routes writes aimed at shared prefix pages to the drop
         index — a slot can never corrupt a page other consumers read.
         `bound` (speculation) additionally drops rows at or past the
-        per-slot accepted-length bound."""
-        def bundle(write_mask, bound=None):
+        per-slot accepted-length bound.  `kernel` marks the bundle for the
+        pallas paged-decode kernel (the Sq=1 tick only — admit chunks and
+        the speculative verify window read through the gather oracle)."""
+        def bundle(write_mask, bound=None, kernel=False):
             return attn.PagedKV(tables=pool.tables, n_pages=pool.n_pages,
                                 write_mask=write_mask, max_seq=self.max_seq,
                                 page_size=self.page_size, owned=pool.owned,
-                                bound=bound)
+                                bound=bound, decode_kernel=kernel)
         return bundle
 
     def _make_tick(self):
@@ -359,6 +382,7 @@ class Engine:
         cfg, sc = self.cfg, self.sampling
         max_seq, steps = self.max_seq, self.decode_steps
         paged_mode = self.kv_layout == "paged"
+        use_kernel = self.decode_kernel
 
         def tick(params, state, caches):
             def body(carry, _):
@@ -367,8 +391,9 @@ class Engine:
                 # entries may point at pages since re-granted to another
                 # request (dense slots own their rows, so masking there is
                 # unnecessary — and the PR-4 path stays untouched)
-                pv = self._paged_kv(state.pages)(state.active) if paged_mode \
-                    else None
+                pv = self._paged_kv(state.pages)(state.active,
+                                                 kernel=use_kernel) \
+                    if paged_mode else None
                 logits, caches = M.decode_step(
                     params, state.last_tok[:, None], cfg, caches, state.pos,
                     paged=pv)
@@ -994,6 +1019,18 @@ class Engine:
         self._admit()
         if not any(r is not None for r in self.slot_req):
             return False
+        # KV bytes this tick's decode steps read (tick-start lengths; the
+        # kernel touches live pages only, the gather oracle — dense decode
+        # and the speculative verify window included — always materializes
+        # num_slots × max_seq rows)
+        if self.decode_kernel:
+            rows = pk_kernel.decode_read_rows(
+                [len(r.prompt) + len(r.out_tokens)
+                 for r in self.slot_req if r is not None], self.page_size)
+        else:
+            rows = pk_kernel.oracle_read_rows(self.num_slots, self.max_seq)
+        self.kv_bytes_read += self.decode_steps * rows * self._kv_row_bytes
+        self.kv_read_steps += self.decode_steps
         self.state, self.caches, toks, emitted = self._tick(
             self.params, self.state, self.caches)
         # non-spec tick: (steps, slots); spec tick: (steps, slots, window)

@@ -120,3 +120,52 @@ def test_rope_relative_property():
         return float(jnp.sum(qr * kr))
     assert abs(dot_at(3, 1) - dot_at(10, 8)) < 1e-4
     assert abs(dot_at(0, 0) - dot_at(7, 7)) < 1e-4
+
+
+def test_causal_attention_ragged_tail():
+    """Sq not divisible by Q_CHUNK runs the full chunks through the scanned
+    body plus one trailing partial chunk — same result as unchunked."""
+    B, H, Hkv, hd = 1, 4, 2, 8
+    old = A.Q_CHUNK
+    try:
+        A.Q_CHUNK = 16
+        q, k, v = _qkv(jax.random.PRNGKey(2), B, A.Q_CHUNK + 1, H, Hkv, hd)
+        ragged = A.causal_attention(q, k, v)
+        A.Q_CHUNK = 64
+        full = A.causal_attention(q, k, v)
+    finally:
+        A.Q_CHUNK = old
+    assert ragged.shape == full.shape
+    np.testing.assert_allclose(np.asarray(ragged), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_negative_position_never_writes_dense():
+    """Regression: a padding row at position -1 used to wrap through
+    numpy-style negative indexing into the cache's last row; the write
+    masks must drop it."""
+    cache = jnp.zeros((2, 8, 2, 4))
+    new = jnp.ones((2, 1, 2, 4))
+    dv = A.DenseKV(write_mask=jnp.ones((2,), bool), max_seq=8)
+    out = A.dense_update(cache, new, jnp.array([[-1], [3]], jnp.int32), dv)
+    assert float(jnp.abs(out[0]).sum()) == 0.0      # -1 must not alias row 7
+    assert float(jnp.abs(out[1, 3]).sum()) == 8.0   # in-range row still lands
+
+
+def test_negative_position_never_writes_paged():
+    """Regression: position -1 floor-divides to page index -1 (which passes
+    `< n_pages`), clips to table entry 0 and wraps its row positive —
+    without the lower bound it landed inside a live page."""
+    P, ps = 4, 4
+    pool = jnp.zeros((P, ps, 2, 4))
+    new = jnp.ones((2, 1, 2, 4))
+    pv = A.PagedKV(tables=jnp.array([[1, 2], [3, 0]], jnp.int32),
+                   n_pages=jnp.array([2, 2], jnp.int32),
+                   write_mask=jnp.ones((2,), bool),
+                   max_seq=8, page_size=ps)
+    out = A.paged_update(pool, new, jnp.array([[-1], [5]], jnp.int32), pv)
+    # slot 0's write at -1 must vanish: its pages (1 and 2) stay zero
+    assert float(jnp.abs(out[1]).sum()) == 0.0
+    assert float(jnp.abs(out[2]).sum()) == 0.0
+    # slot 1's in-range write lands in page 0 (table entry 1), row 5%4
+    assert float(jnp.abs(out[0, 1]).sum()) == 8.0
