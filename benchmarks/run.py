@@ -619,6 +619,67 @@ def bench_spec(fast=False):
          f"{stats['off']['streams'] == stats['on']['streams']}",
          deterministic=True)
 
+    # Per-drafter acceptance on a structured but NON-repetitive stream:
+    # layers all zero (the residual passes the embedding through),
+    # embedding[t] = onehot(t % d_model), unembed[i, (i+1) % d_model]
+    # = 1 — greedy continues t -> t+1 (mod d_model), so every n-gram
+    # context is fresh (the table drafter accepts nothing) while the
+    # 2-bit draft model replays the verify rule exactly ({0, 1} weights
+    # and one-hot activations quantize losslessly).  Counters are pure
+    # scheduling arithmetic -> deterministic rows.
+    D, V = cfg.d_model, cfg.vocab_size
+    struct = jax.tree_util.tree_map(jnp.zeros_like, params)
+    emb = jnp.zeros((V, D)).at[jnp.arange(V), jnp.arange(V) % D].set(1.0)
+    unemb = jnp.zeros((D, V)).at[jnp.arange(D),
+                                 (jnp.arange(D) + 1) % D].set(1.0)
+    struct["embed"]["embedding"] = emb.astype(cfg.compute_dtype)
+    struct["embed"]["unembed"] = unemb.astype(cfg.compute_dtype)
+    struct["final_norm"] = jax.tree_util.tree_map(
+        jnp.ones_like, struct["final_norm"])
+    acc = {}
+    for kind in ("ngram", "model"):
+        with Engine(cfg, struct, num_slots=slots, max_seq=max_seq,
+                    draft_len=d, drafter=kind) as eng:
+            reqs = [eng.submit([1, 2, 3], T, seed=0)
+                    for _ in range(slots)]
+            eng.run()
+            st = eng.spec_stats()
+            acc[kind] = st["accepted"] / eng.n_ticks
+            _row(f"spec_drafter_{kind}_s{slots}_d{d}_t{T}", 0.0,
+                 f"acc={st['accepted']}/{st['drafted']} "
+                 f"ticks={eng.n_ticks} acc/tick={acc[kind]:.2f} "
+                 f"syncs/tick={eng.n_syncs / eng.n_ticks:.0f}",
+                 deterministic=True)
+    _row(f"spec_drafter_model_vs_ngram_s{slots}_d{d}_t{T}", 0.0,
+         f"model_acc/tick={acc['model']:.2f} "
+         f"ngram_acc/tick={acc['ngram']:.2f} "
+         f"model_gt_ngram={acc['model'] > acc['ngram']}",
+         deterministic=True)
+    # drafting-overhead wall row: identical structured traffic with the
+    # model drafter on vs speculation off — the per-token delta is the
+    # cost of the 2-bit draft forwards net of accepted-window savings.
+    wall = {}
+    for label, kw in (("off", {"draft_len": 0}),
+                      ("model", {"draft_len": d, "drafter": "model"})):
+        with Engine(cfg, struct, num_slots=slots, max_seq=max_seq,
+                    **kw) as eng:
+            eng.submit([1, 2], 3)                    # compile warmup
+            eng.run()
+            dt = float("inf")
+            for _ in range(3):
+                reqs = [eng.submit([1, 2, 3], T, seed=0)
+                        for _ in range(slots)]
+                t0 = time.perf_counter()
+                eng.run()
+                dt = min(dt, time.perf_counter() - t0)
+            toks = sum(len(r.out_tokens) for r in reqs)
+            wall[label] = dt / toks
+    _row(f"spec_draft_overhead_s{slots}_d{d}_t{T}",
+         wall["model"] * 1e6,
+         f"model={1 / wall['model']:.0f} tok/s "
+         f"off={1 / wall['off']:.0f} tok/s "
+         f"overhead={wall['model'] / wall['off']:.2f}x")
+
 
 # --- Dry-run roofline summary (reads results if present) --------------------
 
@@ -649,7 +710,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller kernel shapes")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench group names to run")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write machine-readable records to PATH")
     args, _ = ap.parse_known_args()
@@ -669,8 +731,15 @@ def main() -> None:
         "spec": lambda: bench_spec(args.fast),
         "roofline": bench_roofline,
     }
+    only = None
+    if args.only:
+        only = {s.strip() for s in args.only.split(",") if s.strip()}
+        unknown = only - set(benches)
+        if unknown:
+            ap.error(f"unknown bench name(s): {', '.join(sorted(unknown))}"
+                     f" (choose from {', '.join(benches)})")
     for name, fn in benches.items():
-        if args.only and name != args.only:
+        if only is not None and name not in only:
             continue
         fn()
     if args.json:

@@ -145,3 +145,37 @@ def tree_prepare_serving(params: Any, cfg: QuantConfig,
         return leaf
 
     return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def tree_requantize_serving(params: Any, cfg: QuantConfig,
+                            predicate=None) -> Any:
+    """Re-quantize a parameter pytree to `cfg.bits_w` for serving.
+
+    Like `tree_prepare_serving`, but also accepts trees whose servable
+    leaves are ALREADY `QuantizedTensor`s (a serving tree being demoted to
+    a low-bit draft tree): those round-trip through `quant.requantize`,
+    float servable leaves quantize directly, everything else (embedding,
+    norms, recurrence matmuls) passes through untouched."""
+    def default_pred(path: str, leaf) -> bool:
+        if isinstance(leaf, quant.QuantizedTensor):
+            return True
+        return leaf.ndim >= 2 and path.split(".")[-1] in _SERVABLE
+
+    pred = predicate or default_pred
+
+    def visit(path, leaf):
+        pstr = ".".join(
+            str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+            for p in path)
+        if isinstance(leaf, quant.QuantizedTensor) and pred(pstr, leaf):
+            # same (…, in, out) layout contract as prepare_serving
+            nd = len(leaf.shape)
+            return quant.requantize(leaf, cfg.bits_w, axis=nd - 2,
+                                    pack=cfg.bits_w < 8, pack_axis=-2)
+        if isinstance(leaf, jax.Array) and pred(pstr, leaf):
+            return prepare_serving(leaf, cfg)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(visit, params,
+                                            is_leaf=lambda x: isinstance(
+                                                x, quant.QuantizedTensor))

@@ -107,6 +107,19 @@ def quantize(x: jax.Array, bits: int, axis: int | None = -1,
     return QuantizedTensor(q, scale.astype(jnp.float32), bits, False, x.shape)
 
 
+def requantize(qt: QuantizedTensor, bits: int, axis: int | None = -1,
+               pack: bool = False, pack_axis: int = -1) -> QuantizedTensor:
+    """Re-quantize an already-quantized tensor to a (usually lower) width.
+
+    Dequantize → quantize: the only faithful route between symmetric
+    grids whose scales differ per channel.  Requantizing to the SAME
+    width is idempotent up to scale rounding; dropping width (8→2) is
+    how a serving tree becomes a cheap draft tree.
+    """
+    return quantize(qt.dequantize(), bits, axis=axis, pack=pack,
+                    pack_axis=pack_axis)
+
+
 def pack_bits(q: jax.Array, bits: int) -> jax.Array:
     """Pack sub-byte signed ints along the last axis into int8 storage.
 

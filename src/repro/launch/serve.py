@@ -10,7 +10,8 @@
         [--decode-kernel auto|on|off] \
         [--prefix-cache on|off] [--prefix-chunk 16] \
         [--prefix-max-chains 4096] \
-        [--draft-len 4 --spec-ngram 2 --spec-table 512]
+        [--draft-len 4 --spec-ngram 2 --spec-table 512] \
+        [--drafter ngram|model --draft-bits 2 --draft-layers 0]
 
 All engine knobs funnel into ONE `EngineOptions` bundle
 (repro.runtime.options) — the launcher is the reference construction of
@@ -118,6 +119,20 @@ def main():
                     help="n-gram order of the speculation drafter")
     ap.add_argument("--spec-table", type=int, default=512,
                     help="per-slot drafter table buckets")
+    ap.add_argument("--drafter", default="ngram",
+                    choices=("ngram", "model"),
+                    help="speculation proposal engine: the online n-gram "
+                         "table, or 'model' — the serving weights "
+                         "requantized to --draft-bits decoding through a "
+                         "private draft KV cache (%(default)s)")
+    ap.add_argument("--draft-bits", type=int, default=2,
+                    choices=(2, 4, 8),
+                    help="draft-model weight/activation precision "
+                         "(%(default)s — the BRAMAC 2-bit datapath)")
+    ap.add_argument("--draft-layers", type=int, default=0,
+                    help="truncate the draft model to its first N blocks "
+                         "(0 = full depth; must be whole layer-pattern "
+                         "periods)")
     ap.add_argument("--check-invariants", action="store_true",
                     help="cross-check the host page-pool mirror against "
                          "the device allocator after every sync")
@@ -154,7 +169,11 @@ def main():
                              max_chains=args.prefix_max_chains),
         speculation=SpeculationOptions(draft_len=args.draft_len,
                                        ngram=args.spec_ngram,
-                                       table=args.spec_table),
+                                       table=args.spec_table,
+                                       drafter=args.drafter,
+                                       draft_bits=args.draft_bits,
+                                       draft_layers=args.draft_layers
+                                       or None),
         parallel=ParallelOptions(mesh=mesh,
                                  capacity_factor=args.capacity_factor
                                  or None,
@@ -190,7 +209,8 @@ def main():
         st = eng.spec_stats()
         if args.draft_len:
             if st["enabled"]:
-                print(f"  speculation: draft_len={st['draft_len']}, "
+                print(f"  speculation: drafter={st['drafter']}, "
+                      f"draft_len={st['draft_len']}, "
                       f"{st['accepted']}/{st['drafted']} drafts accepted "
                       f"({100 * st['acceptance_rate']:.0f}%), "
                       f"{eng.n_generated / max(eng.n_ticks, 1):.2f} "

@@ -116,10 +116,22 @@ class SpeculationOptions:
     costs.  Recurrent-hybrid, cross-attention and MoE archs opt out
     silently (recurrent state cannot rewind a rejected draft; MoE
     capacity drops depend on tokens-per-call, which would break
-    verify/decode bit parity)."""
+    verify/decode bit parity).
+
+    `drafter` selects the proposal engine: "ngram" (the table above) or
+    "model" — the serving model's own weights requantized to `draft_bits`
+    (2 by default: the BRAMAC reduced-precision datapath) and optionally
+    truncated to the first `draft_layers` blocks, drafting through a
+    private per-slot draft KV cache (speculate.QuantDrafter, invariant
+    A6).  The model drafter additionally opts out of the prefix cache:
+    a skipped prefill chunk would leave draft-cache rows unwritten.
+    """
     draft_len: int = 0
     ngram: int = 2
     table: int = 512
+    drafter: str = "ngram"
+    draft_bits: int = 2
+    draft_layers: int | None = None
 
     def __post_init__(self):
         _check(self.draft_len >= 0,
@@ -128,6 +140,14 @@ class SpeculationOptions:
                f"speculation ngram must be >= 2, got {self.ngram}")
         _check(self.table >= 1,
                f"speculation table must be >= 1, got {self.table}")
+        if self.drafter not in ("ngram", "model"):
+            raise ValueError(f"drafter must be 'ngram' or 'model', "
+                             f"got {self.drafter!r}")
+        _check(self.draft_bits in (2, 4, 8),
+               f"draft_bits must be one of (2, 4, 8), got {self.draft_bits}")
+        if self.draft_layers is not None:
+            _check(int(self.draft_layers) >= 1,
+                   f"draft_layers must be >= 1, got {self.draft_layers}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -171,6 +191,9 @@ _LEGACY = {
     "draft_len": ("speculation", "draft_len"),
     "spec_ngram": ("speculation", "ngram"),
     "spec_table": ("speculation", "table"),
+    "drafter": ("speculation", "drafter"),
+    "draft_bits": ("speculation", "draft_bits"),
+    "draft_layers": ("speculation", "draft_layers"),
     "mesh": ("parallel", "mesh"),
     "capacity_factor": ("parallel", "capacity_factor"),
     "dispatch": ("parallel", "dispatch"),

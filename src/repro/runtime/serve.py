@@ -63,20 +63,26 @@ Recurrent-hybrid archs opt out silently (their state accumulates over
 every token) but stream identically.
 
 Speculative decoding (`EngineOptions.speculation.draft_len > 0`): each
-tick step drafts `draft_len` tokens from a device-resident per-slot
-n-gram table (`runtime/speculate.py` — self-speculation, no second
-model), scores the whole window [last_tok, g_1..g_d] in ONE forward
-through the same chunked path prefill uses, and accepts/replaces every
-position on device (`sampling.spec_verify`).  Accepted tokens advance
-the slot several positions per step; rejected draft rows are rolled
-back through the block table (`pages.rollback`, honouring the same
-write-mask/ownership/bound discipline as the write) or the dense
-scatter (`speculate.rollback_dense`).  Greedy streams are bit-identical
-to non-speculative decoding (invariants A1-A5 in speculate.py); the
-host still syncs once per tick whatever the acceptance length.
-Recurrent-hybrid, cross-attention and MoE archs opt out silently
-(recurrent state cannot rewind; MoE capacity drops depend on the
-token count per call, which would break verify/decode bit parity).
+tick step drafts `draft_len` tokens from the configured drafter —
+`drafter="ngram"` (default), a device-resident per-slot n-gram table,
+or `drafter="model"`, the serving model's own weights requantized to
+`draft_bits` (2-bit BRAMAC datapath) decoding through a private
+per-slot draft KV cache that rides inside SlotState
+(`runtime/speculate.py`) — scores the whole window [last_tok, g_1..g_d]
+in ONE forward through the same chunked path prefill uses, and
+accepts/replaces every position on device (`sampling.spec_verify`).
+Accepted tokens advance the slot several positions per step; rejected
+draft rows are rolled back through the block table (`pages.rollback`,
+honouring the same write-mask/ownership/bound discipline as the write)
+or the dense scatter (`speculate.rollback_dense`).  Greedy streams are
+bit-identical to non-speculative decoding (invariants A1-A6 in
+speculate.py); the host still syncs once per tick whatever the
+acceptance length.  Recurrent-hybrid, cross-attention and MoE archs opt
+out silently (recurrent state cannot rewind; MoE capacity drops depend
+on the token count per call, which would break verify/decode bit
+parity), and the model drafter additionally opts out of the prefix
+cache (a skipped warm-prefix chunk would leave draft-cache rows
+unwritten).
 
 Construction: `Engine(cfg, params, options=EngineOptions(...))` is the
 primary constructor (`repro.runtime.options`); the historic flat kwargs
@@ -117,8 +123,10 @@ class SlotState(NamedTuple):
 
     `pages` is the refcounted paged-KV allocator state (empty arrays
     under the dense layout); see `repro.runtime.pages.PagePool`.
-    `draft` is the per-slot n-gram drafter state (zero-width when
-    speculation is off); see `repro.runtime.speculate.DraftState`."""
+    `draft` is the per-slot drafter state (zero-width when speculation
+    is off): n-gram tables (`speculate.DraftState`) or the model
+    drafter's requantized params + private draft KV cache
+    (`speculate.QuantDraftState`)."""
     last_tok: jax.Array     # (S,) i32  last sampled token (next decode input)
     pos: jax.Array          # (S,) i32  next cache index to write
     budget: jax.Array       # (S,) i32  tokens still to emit after this one
@@ -126,7 +134,7 @@ class SlotState(NamedTuple):
     rng: jax.Array          # (S, 2) u32 per-request sampling key chain
     stop: jax.Array         # (S, K) i32 per-request stop set, -1 padded
     pages: pg.PagePool      # refcounted page allocator (paged layout)
-    draft: spc.DraftState   # n-gram drafter tables (speculation)
+    draft: Any              # drafter state (n-gram tables / draft KV)
     n_drafted: jax.Array    # (S,) i32 drafted tokens, current occupant
     n_accepted: jax.Array   # (S,) i32 drafted tokens emitted
 
@@ -183,6 +191,10 @@ class Engine:
                       default) disables speculation entirely
       spec_ngram / spec_table — n-gram order and per-slot table buckets
                       of the self-speculation drafter (speculate.py)
+      drafter       — "ngram" (default) or "model": the 2-bit BRAMAC
+                      draft model (the serving weights requantized to
+                      draft_bits, optionally truncated to draft_layers
+                      blocks) proposing through a private draft KV cache
       kv_layout     — "paged" (default) or "dense" (see module docstring)
       num_pages     — paged pool size; default num_slots * ceil(max_seq /
                       cfg.page_size) (capacity-equal to dense — shrink it
@@ -256,9 +268,21 @@ class Engine:
                         for s in cfg.layer_pattern)
         self.draft_len = min(options.speculation.draft_len,
                              max(0, max_seq - 2)) if spec_ok else 0
-        self.drafter = spc.NGramDrafter(options.speculation.ngram,
-                                        options.speculation.table) \
+        self.drafter_kind = options.speculation.drafter \
             if self.draft_len else None
+        if not self.draft_len:
+            self.drafter = None
+        elif self.drafter_kind == "model":
+            # the 2-bit BRAMAC draft model: the engine's own weights
+            # requantized, with a private per-slot draft KV cache riding
+            # inside SlotState (speculate.QuantDrafter, invariant A6)
+            self.drafter = spc.QuantDrafter.build(
+                cfg, params, max_seq,
+                bits=options.speculation.draft_bits,
+                draft_layers=options.speculation.draft_layers)
+        else:
+            self.drafter = spc.NGramDrafter(options.speculation.ngram,
+                                            options.speculation.table)
         self._stop_cap = max(4, len(self.stop_tokens))
         self._next_uid = itertools.count()
         self._base_key = jax.random.PRNGKey(sch.seed)
@@ -300,11 +324,15 @@ class Engine:
                  else jax.default_backend() == "tpu"))
         # --- prefix cache (paged only; recurrent state accumulates over
         # every token, so those archs cannot share prefixes — they opt out
-        # silently but stream identically) ---
+        # silently but stream identically.  The model drafter opts out
+        # too: a warm-prefix chunk skips its prefill compute, which would
+        # leave the corresponding DRAFT-cache rows unwritten and break
+        # invariant A6 — streams stay bit-identical, admission just runs
+        # the full prefill) ---
         self.prefix_chunk = int(options.prefix.chunk) \
             if options.prefix.chunk is not None else self.page_size
         enabled = options.prefix.enabled and self.kv_layout == "paged" \
-            and not recurrent
+            and not recurrent and self.drafter_kind != "model"
         self.prefix = pg.PrefixCache(self.prefix_chunk, self.page_size,
                                      max_chains=options.prefix.max_chains) \
             if enabled else None
@@ -957,8 +985,12 @@ class Engine:
                 "chunks_skipped": self.prefill_chunks_skipped}
 
     def spec_stats(self) -> dict:
-        """Speculation telemetry: drafted/accepted totals over retired
-        requests plus the live slots' in-flight counters."""
+        """Speculation telemetry: the active drafter's identity ("ngram"
+        | "model", None when speculation is off) and drafted/accepted
+        totals over retired requests plus the live slots' in-flight
+        counters.  `abort()` retires a running request through the same
+        `_finish` path as normal completion, so its in-flight split folds
+        into the totals rather than vanishing."""
         drafted, accepted = self.tokens_drafted, self.tokens_accepted
         for r in self.slot_req:
             if r is not None:
@@ -966,6 +998,7 @@ class Engine:
                 accepted += r.accepted_tokens
         return {"enabled": bool(self.draft_len),
                 "draft_len": self.draft_len,
+                "drafter": self.drafter_kind,
                 "drafted": drafted, "accepted": accepted,
                 "acceptance_rate": accepted / drafted if drafted else 0.0}
 

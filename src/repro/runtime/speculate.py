@@ -45,14 +45,26 @@ style of pages.py's I1-I5):
       positions (last write wins), never a duplicate-index scatter whose
       XLA ordering is unspecified — the device table bit-matches the
       pure-Python reference replay (tests/test_speculative.py).
+  A6 (draft-cache replay)  A model-based drafter's private KV cache
+      always equals a fresh replay of the slot's verified stream through
+      the draft model: only `observe` writes it (verified emissions,
+      appended at the stream offset with the same masked/bounded scatter
+      discipline as the main cache), while `propose` threads its
+      speculative rows through the scan carry and discards them — a
+      rejected window leaves no residue, so the cache "rewinds" to the
+      accepted length by construction, tick after tick.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Protocol
+from typing import Any, NamedTuple, Protocol
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import bramac_linear as bl
+from repro.models import attention as attn
+from repro.models import model as M
 
 # FNV-1a over (token + 1) in wrapping uint32; +1 keeps the -1 history
 # padding from colliding with token 0
@@ -73,7 +85,10 @@ class DraftState(NamedTuple):
     """Per-slot drafter state, device-resident inside SlotState.
 
     keys  (S, T) u32 — full context hash stored per bucket (direct-mapped;
-          an exact-match check at lookup, 0 means empty)
+          an exact-match check at lookup).  Stored as `hash | 1` so 0
+          always means empty: a context whose FNV-1a hash happens to be
+          exactly 0 would otherwise false-hit every empty bucket and
+          draft token 0
     nexts (S, T) i32 — the token observed after that context
     hist  (S, ctx) i32 — the slot's most recent ctx tokens, -1-padded;
           always ends with the slot's current last_tok"""
@@ -93,8 +108,10 @@ def empty_state(num_slots: int) -> DraftState:
 class Drafter(Protocol):
     """What the engine needs from a drafter.  All methods are traced
     inside the jit'd tick/admit; state must be a fixed-shape pytree.
-    A future model-based drafter (2-bit BRAMAC draft model) plugs in
-    here — `observe` would be a no-op and `propose` a forward pass."""
+    Two implementations: `NGramDrafter` (online n-gram table) and
+    `QuantDrafter` (the 2-bit BRAMAC draft model — `observe` replays
+    verified emissions through a private draft KV cache, `propose` is
+    `draft_len` cheap quantized decode steps)."""
 
     def init_state(self, num_slots: int): ...
 
@@ -150,7 +167,9 @@ class NGramDrafter:
             h = ngram_hash(st.hist)                        # (S,)
             idx = (h % T).astype(jnp.int32)
             tgt = jnp.where(m, idx, T)                     # T -> dropped
-            keys = st.keys.at[rows, tgt].set(h, mode="drop")
+            # low bit forced to 1: a stored key can never equal the
+            # empty-bucket sentinel 0 (lookup applies the same offset)
+            keys = st.keys.at[rows, tgt].set(h | jnp.uint32(1), mode="drop")
             nexts = st.nexts.at[rows, tgt].set(tok, mode="drop")
             hist = jnp.where(
                 m[:, None],
@@ -172,12 +191,150 @@ class NGramDrafter:
         def step(hist, _):
             h = ngram_hash(hist)
             idx = (h % T).astype(jnp.int32)
-            hit = ds.keys[rows, idx] == h
+            hit = ds.keys[rows, idx] == (h | jnp.uint32(1))
             g = jnp.where(hit, ds.nexts[rows, idx], hist[:, -1])
             hist = jnp.concatenate([hist[:, 1:], g[:, None]], axis=1)
             return hist, g
 
         _, gs = jax.lax.scan(step, ds.hist, None, length=draft_len)
+        return gs.T                                        # (S, draft_len)
+
+
+class QuantDraftState(NamedTuple):
+    """Per-slot state of the model-based drafter, riding inside SlotState.
+
+    params    the requantized draft parameter tree.  Carried as state
+              (not a jit closure constant) so buffer donation aliases it
+              through every tick at zero copies — reset/observe/propose
+              all return it untouched.
+    caches    private dense draft KV, (n_periods, S, max_seq, …) leaves
+              from model.init_cache on the draft config.
+    n_stream  (S,) i32 — verified-stream length = draft-cache rows held.
+    last      (S,) i32 — the slot's most recent verified token."""
+    params: Any
+    caches: Any
+    n_stream: jax.Array
+    last: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantDrafter:
+    """The 2-bit BRAMAC draft model: the serving model's own weights
+    requantized to `draft_bits` (optionally truncated to the first
+    `draft_layers` blocks, sharing embeddings and head), run through the
+    quantized serving kernel path (`bramac_linear.serve_dense` →
+    `ops.quant_matmul`) — the paper's reduced-precision datapath drafting
+    for the exact one.
+
+    The draft KV cache obeys invariant A6: rows [0, n_stream) hold
+    exactly the K/V of the slot's verified stream, nothing else.
+    `observe` appends a tick's verified emissions in ONE chunked draft
+    forward at `cache_pos = n_stream` (masked rows and rows at or past
+    the per-slot bound drop, exactly like the main cache's speculative
+    write discipline); `propose` decodes `draft_len` greedy steps
+    feeding `last` at position n_stream - 1 first — its speculative
+    rows live only in the scan carry, so a rejected window needs no
+    explicit rewind.  `reset` restores admitted slots' rows to the
+    init-cache values (int8-KV scale leaves init to ones, so a zero
+    blanket would corrupt the layout)."""
+    cfg: Any                       # draft ModelConfig (quant enabled)
+    params: Any = dataclasses.field(repr=False)
+    max_seq: int = 0
+
+    @classmethod
+    def build(cls, cfg, params, max_seq: int, bits: int,
+              draft_layers: int | None) -> "QuantDrafter":
+        """Requantize the serving tree into a drafter.
+
+        `draft_layers` truncates to the first N blocks (must divide into
+        whole periods of cfg.layer_pattern); embeddings and final norm
+        are shared with the serving tree, the unembed head is
+        requantized like every other servable matmul."""
+        n_layers = cfg.num_layers if draft_layers is None else draft_layers
+        pat = len(cfg.layer_pattern)
+        if n_layers % pat or not 0 < n_layers <= cfg.num_layers:
+            raise ValueError(
+                f"draft_layers must be a multiple of the {pat}-block "
+                f"layer pattern in [1, {cfg.num_layers}], got {n_layers}")
+        periods = n_layers // pat
+        draft_cfg = cfg.replace(
+            num_layers=n_layers,
+            quant=bl.QuantConfig(enabled=True, bits_w=bits, bits_a=bits))
+        # leading axis of every stacked leaf is the scan period; a
+        # QuantizedTensor leaf slices through its values/scale children
+        # (its static `shape` goes stale, which unpack never consults)
+        layers = jax.tree_util.tree_map(lambda a: a[:periods],
+                                        params["layers"])
+        draft_params = bl.tree_requantize_serving(
+            {"embed": params["embed"], "final_norm": params["final_norm"],
+             "layers": layers}, draft_cfg.quant)
+        return cls(cfg=draft_cfg, params=draft_params, max_seq=max_seq)
+
+    def init_state(self, num_slots: int) -> QuantDraftState:
+        return QuantDraftState(
+            params=self.params,
+            caches=M.init_cache(self.cfg, num_slots, self.max_seq),
+            n_stream=jnp.zeros((num_slots,), jnp.int32),
+            last=jnp.zeros((num_slots,), jnp.int32))
+
+    def reset(self, ds: QuantDraftState, mask) -> QuantDraftState:
+        """Restore the slots in `mask` (S,) bool to init-cache values
+        (NOT zeros — int8-KV scale leaves init to ones)."""
+        S = ds.n_stream.shape[0]
+        init = M.init_cache(self.cfg, S, self.max_seq)
+
+        def merge(cur, ini):
+            m = mask.reshape((1, S) + (1,) * (cur.ndim - 2))
+            return jnp.where(m, ini, cur)
+
+        return QuantDraftState(
+            params=ds.params,
+            caches=jax.tree_util.tree_map(merge, ds.caches, init),
+            n_stream=jnp.where(mask, 0, ds.n_stream),
+            last=jnp.where(mask, 0, ds.last))
+
+    def observe(self, ds: QuantDraftState, tokens, mask) -> QuantDraftState:
+        """Append verified tokens (S, L) i32 to the draft cache in one
+        chunked draft forward at cache_pos = n_stream.  mask (S, L) bool
+        must be left-contiguous per slot (it is at every call site:
+        admission prefill chunks and the tick's emission window); rows
+        at or past each slot's n_stream + n bound drop, so the masked
+        tail of the chunk can never contaminate the cache (A6)."""
+        n = jnp.sum(mask, axis=1).astype(jnp.int32)        # (S,)
+        pv = attn.DenseKV(write_mask=n > 0, max_seq=self.max_seq,
+                          bound=ds.n_stream + n)
+        _, _, caches = M.forward(
+            self.params, {"tokens": tokens}, self.cfg, caches=ds.caches,
+            cache_pos=ds.n_stream, last_only=True, paged=pv)
+        L = tokens.shape[1]
+        last = jnp.take_along_axis(
+            tokens, jnp.clip(n - 1, 0, L - 1)[:, None], axis=1)[:, 0]
+        return QuantDraftState(
+            params=ds.params, caches=caches,
+            n_stream=ds.n_stream + n,
+            last=jnp.where(n > 0, last, ds.last))
+
+    def propose(self, ds: QuantDraftState, draft_len: int):
+        """`draft_len` greedy draft decode steps from the verified
+        stream.  The first step feeds `last` at position n_stream - 1
+        (an identical rewrite of a row the cache already holds); every
+        speculative row lives in the scan carry and is discarded with
+        it, so the persistent draft cache never sees a draft token (A6).
+        Returns (S, draft_len) i32 drafts."""
+        S = ds.n_stream.shape[0]
+        pv = attn.DenseKV(write_mask=jnp.ones((S,), bool),
+                          max_seq=self.max_seq)
+
+        def step(carry, _):
+            caches, tok, pos = carry
+            logits, caches = M.decode_step(
+                self.params, tok[:, None], self.cfg, caches, pos, paged=pv)
+            g = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (caches, g, pos + 1), g
+
+        _, gs = jax.lax.scan(
+            step, (ds.caches, ds.last, ds.n_stream - 1), None,
+            length=draft_len)
         return gs.T                                        # (S, draft_len)
 
 

@@ -40,6 +40,12 @@ def test_options_sections_validate_at_construction():
         SpeculationOptions(draft_len=-1)
     with pytest.raises(ValueError, match="ngram must be >= 2"):
         SpeculationOptions(ngram=1)
+    with pytest.raises(ValueError, match="drafter must be 'ngram' or"):
+        SpeculationOptions(drafter="oracle")
+    with pytest.raises(ValueError, match="draft_bits"):
+        SpeculationOptions(draft_bits=3)
+    with pytest.raises(ValueError, match="draft_layers"):
+        SpeculationOptions(draft_layers=0)
     with pytest.raises(ValueError, match="sampling method"):
         EngineOptions(sampling="argmax")
     with pytest.raises(TypeError, match="EngineOptions.schedule"):

@@ -68,3 +68,30 @@ def test_quantize_packed_matches_unpacked(bits):
     b = q.quantize(jnp.asarray(x), bits, pack=True)
     np.testing.assert_array_equal(np.asarray(a.values),
                                   np.asarray(b.unpacked_values()))
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_requantize_matches_quantize_of_dequantized(bits):
+    """requantize(qt, b) == quantize(qt.dequantize(), b): narrowing an
+    8-bit tensor to the draft width is exactly a fresh quantization of
+    its dequantized values, and exactly-representable values ({0, 1}
+    weights at scale 1) survive the round trip bit-for-bit."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(8, 16)).astype(np.float32)
+    qt8 = q.quantize(jnp.asarray(x), 8, axis=-1)
+    narrow = q.requantize(qt8, bits, axis=-1)
+    ref = q.quantize(qt8.dequantize(), bits, axis=-1)
+    assert narrow.bits == bits
+    np.testing.assert_array_equal(np.asarray(narrow.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(narrow.scale),
+                                  np.asarray(ref.scale))
+    # {0, 1} values are exact at any width: lo(2) = -2, hi(2) = 1
+    ones = jnp.asarray(rng.integers(0, 2, size=(4, 8)).astype(np.float32))
+    exact = q.requantize(q.quantize(ones, 8, axis=-1), bits, axis=-1)
+    np.testing.assert_array_equal(np.asarray(exact.dequantize()),
+                                  np.asarray(ones))
+    # packed output unpacks to the unpacked values
+    packed = q.requantize(qt8, bits, axis=-1, pack=True, pack_axis=-2)
+    np.testing.assert_array_equal(np.asarray(packed.unpacked_values()),
+                                  np.asarray(narrow.values))
