@@ -681,6 +681,65 @@ def bench_spec(fast=False):
          f"overhead={wall['model'] / wall['off']:.2f}x")
 
 
+# --- Disaggregated prefill/decode: page handoff vs colocated ----------------
+
+def bench_disagg(fast=False):
+    """Disaggregated prefill/decode serving vs the colocated engine at
+    equal traffic: wall-time tok/s and mean TTFT for both modes, plus a
+    deterministic record asserting (a) greedy streams are bit-identical
+    across the page handoff, and (b) the handoff itself is exactly
+    reproducible — pages transferred, transfer rounds and the decode
+    pool's pages-in-use high-water are fixed integers for the fixed
+    schedule (the I7 discipline: lowest-free-id grants replayed by the
+    decode-side HostPool mirror)."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.runtime.serve import Engine
+
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    R, T = (4, 13) if fast else (8, 13)
+    slots, max_seq, dsteps = 4, 64, 4
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=int(rng.integers(4, 20)))
+               for _ in range(R)]
+    stats = {}
+    for name in ("colocated", "disagg"):
+        kw = {"disagg": True} if name == "disagg" else {}
+        with Engine(cfg, params, num_slots=slots, max_seq=max_seq,
+                    decode_steps=dsteps, kv_layout="paged", **kw) as eng:
+            eng.submit(prompts[0][:4], dsteps + 1)     # compile warmup
+            eng.run()
+            dt = float("inf")
+            for _ in range(3):
+                eng.pages_high_water = eng.pages_in_use
+                if name == "disagg":
+                    eng.pages_transferred = eng.transfer_rounds = 0
+                reqs = [eng.submit(p, T) for p in prompts]
+                t0 = time.perf_counter()
+                eng.run()
+                dt = min(dt, time.perf_counter() - t0)
+            toks = sum(len(r.out_tokens) for r in reqs)
+            ttft = sum(r.t_first - r.t_submit for r in reqs) / len(reqs)
+            stats[name] = {"streams": [r.out_tokens for r in reqs],
+                           "hw": eng.pages_high_water,
+                           "pages": eng.num_pages,
+                           "moved": getattr(eng, "pages_transferred", 0),
+                           "rounds": getattr(eng, "transfer_rounds", 0)}
+            _row(f"disagg_{name}_s{slots}_n{dsteps}_r{R}x{T}",
+                 dt * 1e6 / toks,
+                 f"{toks / dt:.0f} tok/s ttft={ttft * 1e3:.2f}ms")
+    c, g = stats["colocated"], stats["disagg"]
+    _row(f"disagg_handoff_s{slots}_r{R}x{T}", 0.0,
+         f"streams_equal={c['streams'] == g['streams']} "
+         f"transferred={g['moved']} pages in {g['rounds']} rounds "
+         f"decode_highwater={g['hw']}/{g['pages']} pages",
+         deterministic=True)
+
+
 # --- Dry-run roofline summary (reads results if present) --------------------
 
 def bench_roofline():
@@ -714,9 +773,11 @@ def main() -> None:
                     help="comma-separated bench group names to run")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write machine-readable records to PATH")
+    ap.add_argument("--list", action="store_true",
+                    help="print bench group names (valid --only values) "
+                         "and exit")
     args, _ = ap.parse_known_args()
 
-    print("name,us_per_call,derived")
     benches = {
         "table2": bench_table2, "fig7": bench_fig7, "fig9": bench_fig9,
         "fig10": bench_fig10, "fig11": bench_fig11,
@@ -729,8 +790,13 @@ def main() -> None:
         "paged": lambda: bench_paged(args.fast),
         "prefix": lambda: bench_prefix(args.fast),
         "spec": lambda: bench_spec(args.fast),
+        "disagg": lambda: bench_disagg(args.fast),
         "roofline": bench_roofline,
     }
+    if args.list:
+        print("\n".join(benches))
+        return
+    print("name,us_per_call,derived")
     only = None
     if args.only:
         only = {s.strip() for s in args.only.split(",") if s.strip()}

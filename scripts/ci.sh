@@ -84,19 +84,24 @@ for stage in "${STAGES[@]}"; do
     fi
 done
 
+# per-stage wall time rides in the summary so CI-duration regressions
+# (a bench gate that quietly doubled, a test suite that grew a minute)
+# are visible at a glance
 declare -a SUMMARY
 FAILED=0
 for stage in "${STAGES[@]}"; do
     fn="stage_${stage//-/_}"
     echo "=== ci stage: $stage ==="
+    t0=$SECONDS
     "$fn"
     rc=$?
+    dt=$((SECONDS - t0))
     if [ "$rc" -eq 0 ]; then
-        SUMMARY+=("PASS  $stage")
+        SUMMARY+=("PASS  $stage  (${dt}s)")
     elif [ "$rc" -eq "$SKIP_RC" ]; then
-        SUMMARY+=("SKIP  $stage")
+        SUMMARY+=("SKIP  $stage  (${dt}s)")
     else
-        SUMMARY+=("FAIL  $stage")
+        SUMMARY+=("FAIL  $stage  (${dt}s)")
         FAILED=1
     fi
 done

@@ -11,7 +11,8 @@
         [--prefix-cache on|off] [--prefix-chunk 16] \
         [--prefix-max-chains 4096] \
         [--draft-len 4 --spec-ngram 2 --spec-table 512] \
-        [--drafter ngram|model --draft-bits 2 --draft-layers 0]
+        [--drafter ngram|model --draft-bits 2 --draft-layers 0] \
+        [--role prefill|decode|both --prefill-slots 4 --prefill-pages 16]
 
 All engine knobs funnel into ONE `EngineOptions` bundle
 (repro.runtime.options) — the launcher is the reference construction of
@@ -32,10 +33,10 @@ from repro.configs import get_config
 from repro.core.bramac_linear import QuantConfig
 from repro.models import model as M
 from repro.parallel import sharding as shd
-from repro.runtime.options import (DebugOptions, EngineOptions,
-                                   PagingOptions, ParallelOptions,
-                                   PrefixOptions, ScheduleOptions,
-                                   SpeculationOptions)
+from repro.runtime.options import (DebugOptions, DisaggOptions,
+                                   EngineOptions, PagingOptions,
+                                   ParallelOptions, PrefixOptions,
+                                   ScheduleOptions, SpeculationOptions)
 from repro.runtime.sampling import SamplingConfig
 from repro.runtime.serve import Engine
 
@@ -133,6 +134,20 @@ def main():
                     help="truncate the draft model to its first N blocks "
                          "(0 = full depth; must be whole layer-pattern "
                          "periods)")
+    ap.add_argument("--role", default="",
+                    choices=("", "prefill", "decode", "both"),
+                    help="prefill/decode disaggregation: 'both' runs the "
+                         "split engine in-process (prefill worker with its "
+                         "own page pool, page-granularity KV handoff into "
+                         "the decode worker); 'prefill'/'decode' are the "
+                         "future multi-process endpoints (empty = "
+                         "colocated, no split)")
+    ap.add_argument("--prefill-slots", type=int, default=0,
+                    help="disagg: prefill-worker slot count (0 = same as "
+                         "--slots)")
+    ap.add_argument("--prefill-pages", type=int, default=0,
+                    help="disagg: prefill-worker pool pages (0 = capacity-"
+                         "equal: prefill_slots * ceil(max_seq/page_size))")
     ap.add_argument("--check-invariants", action="store_true",
                     help="cross-check the host page-pool mirror against "
                          "the device allocator after every sync")
@@ -178,6 +193,10 @@ def main():
                                  capacity_factor=args.capacity_factor
                                  or None,
                                  dispatch=args.dispatch or None),
+        disagg=DisaggOptions(enabled=bool(args.role),
+                             role=args.role or "both",
+                             prefill_slots=args.prefill_slots or None,
+                             prefill_pages=args.prefill_pages or None),
         debug=DebugOptions(check_invariants=args.check_invariants))
     rng = np.random.default_rng(0)
     # the context manager releases the process-global sharding ctx even if
@@ -231,6 +250,17 @@ def main():
                   f"{eng.kv_bytes_read / max(eng.kv_read_steps, 1):.0f} "
                   f"bytes/step over {eng.kv_read_steps} decode steps "
                   f"({'live-token bounded' if eng.decode_kernel else 'max_seq gather'})")
+            if eng.disagg:
+                dg = eng.disagg_stats()
+                print(f"  disagg: {dg['pages_transferred']} pages "
+                      f"transferred in {dg['transfer_rounds']} rounds "
+                      f"({dg['transfers_backpressured']} backpressured); "
+                      f"decode-worker occupancy "
+                      f"{dg['decode_pages_high_water']}/"
+                      f"{dg['decode_pages']} pages high-water, prefill "
+                      f"pool {dg['prefill_pages_high_water']}/"
+                      f"{dg['prefill_pages']} over {dg['prefill_slots']} "
+                      f"slots")
             st = eng.prefix_stats()
             if st["enabled"]:
                 hist = eng.pool.refcount_hist()

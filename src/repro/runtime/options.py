@@ -3,7 +3,7 @@
 `Engine.__init__` grew to 17 loose kwargs over six PRs; this module
 groups them into one frozen `EngineOptions` dataclass of themed sections
 (sampling, schedule, paging, prefix cache, speculation, parallelism,
-debug), each validating itself in `__post_init__` so a bad knob fails at
+disaggregation, debug), each validating itself in `__post_init__` so a bad knob fails at
 construction — before anything is traced — with the same error messages
 the loose kwargs raised.  `Engine(cfg, params, options=EngineOptions(...))`
 is the primary constructor; the legacy flat kwargs are still accepted and
@@ -167,6 +167,46 @@ class ParallelOptions:
 
 
 @dataclasses.dataclass(frozen=True)
+class DisaggOptions:
+    """Prefill/decode disaggregation (paged layout only, meshless).
+
+    enabled=True splits the engine into a prefill worker with its OWN
+    page pool and slot set and a decode worker owning the fused tick;
+    a finished prompt's KV pages move between the pools at page
+    granularity (`pages.export_pages` / `import_pages`, invariant I7)
+    and greedy streams stay bit-identical to the colocated engine.
+    Prefix caching and speculation switch off under disaggregation
+    (cached pages would pin the prefill pool the decode side cannot
+    read, and drafter state has no page representation to transfer);
+    archs with per-slot cache leaves (recurrent hybrids, xattn) are
+    rejected for the same reason.
+
+    role="both" runs both workers in this process (the only transport
+    implemented today); "prefill" / "decode" name the single-role
+    endpoints of the future multi-process transport and currently
+    raise NotImplementedError at engine construction.
+
+    prefill_slots / prefill_pages size the prefill worker's slot set
+    and pool; None defaults to the decode side's num_slots and a
+    capacity-equal pool (prefill_slots * ceil(max_seq / page_size))."""
+    enabled: bool = False
+    role: str = "both"
+    prefill_slots: int | None = None
+    prefill_pages: int | None = None
+
+    def __post_init__(self):
+        if self.role not in ("prefill", "decode", "both"):
+            raise ValueError(f"role must be 'prefill', 'decode' or "
+                             f"'both', got {self.role!r}")
+        if self.prefill_slots is not None:
+            _check(int(self.prefill_slots) >= 1,
+                   f"prefill_slots must be >= 1, got {self.prefill_slots}")
+        if self.prefill_pages is not None:
+            _check(int(self.prefill_pages) >= 1,
+                   f"prefill_pages must be >= 1, got {self.prefill_pages}")
+
+
+@dataclasses.dataclass(frozen=True)
 class DebugOptions:
     """check_invariants cross-checks the HostPool mirror against the
     device allocator after every sync (and after speculative rollback
@@ -197,6 +237,10 @@ _LEGACY = {
     "mesh": ("parallel", "mesh"),
     "capacity_factor": ("parallel", "capacity_factor"),
     "dispatch": ("parallel", "dispatch"),
+    "disagg": ("disagg", "enabled"),
+    "role": ("disagg", "role"),
+    "prefill_slots": ("disagg", "prefill_slots"),
+    "prefill_pages": ("disagg", "prefill_pages"),
     "check_invariants": ("debug", "check_invariants"),
 }
 
@@ -213,6 +257,7 @@ class EngineOptions:
     prefix: PrefixOptions = PrefixOptions()
     speculation: SpeculationOptions = SpeculationOptions()
     parallel: ParallelOptions = ParallelOptions()
+    disagg: DisaggOptions = DisaggOptions()
     debug: DebugOptions = DebugOptions()
 
     def __post_init__(self):
@@ -228,6 +273,7 @@ class EngineOptions:
                           ("prefix", PrefixOptions),
                           ("speculation", SpeculationOptions),
                           ("parallel", ParallelOptions),
+                          ("disagg", DisaggOptions),
                           ("debug", DebugOptions)):
             if not isinstance(getattr(self, name), typ):
                 raise TypeError(f"EngineOptions.{name} must be a "

@@ -59,6 +59,17 @@ Invariants (property-tested in tests/test_page_allocator_properties.py):
       position through the same write-mask/ownership/bound discipline
       before the tick's host sync — so the pool a speculative engine
       holds matches what the sequential engine would have written.
+  I7  page transfer preserves the allocator discipline across pools:
+      moving a request between pools (`export_pages` → `import_pages` +
+      `adopt`, the prefill→decode handoff in disaggregated serving)
+      copies its pages' contents bit-exactly, grants the destination
+      ids by the SAME lowest-free-id rule as admission (I4, replayed by
+      the destination HostPool so no sync is needed), marks every
+      imported page owned with refcount 1, and releases the source
+      references only in the same traced call that read the tiles — so
+      after any transfer round BOTH pools independently satisfy I1–I6
+      and the moved request's rows read back identical to the rows the
+      source pool held.
 """
 from __future__ import annotations
 
@@ -213,6 +224,58 @@ def rollback(caches, pool_flags, pv, positions):
             0, mode="drop")
 
     return jax.tree_util.tree_map(zero, caches, pool_flags)
+
+
+def export_pages(caches, pool_flags, src_ids):
+    """Gather the page tiles at `src_ids` ((mp,) i32, clipped) from every
+    shared pool leaf — the read half of a cross-pool transfer (I7).  The
+    returned tree mirrors `caches` with the page axis replaced by the mp
+    gathered tiles; per-slot leaves come back zero-width so the tree
+    structure survives a later `tree_map` against the flags.  Entries
+    past the request's real page count gather garbage that the import
+    side routes to the drop index, keeping the call shape-stable."""
+    def take(leaf, is_pool):
+        if not is_pool:
+            return leaf[:, :0]
+        P = leaf.shape[1]                  # leaf: (n_periods, P, ps, ...)
+        return jnp.take(leaf, jnp.clip(src_ids, 0, max(P - 1, 0)), axis=1)
+
+    return jax.tree_util.tree_map(take, caches, pool_flags)
+
+
+def import_pages(caches, pool_flags, tiles, dst_ids, live):
+    """Scatter `export_pages` tiles into this pool's pages `dst_ids`
+    ((mp,) i32) — the write half of a cross-pool transfer (I7).  `live`
+    ((mp,) bool) marks the real entries; the rest route to the drop
+    index.  Contents land bit-exact: tiles were gathered, never
+    recomputed."""
+    def put(leaf, is_pool, tile):
+        if not is_pool:
+            return leaf
+        P = leaf.shape[1]
+        return leaf.at[:, jnp.where(live, dst_ids, P)].set(
+            tile.astype(leaf.dtype), mode="drop")
+
+    return jax.tree_util.tree_map(put, caches, pool_flags, tiles)
+
+
+def adopt(pool: PagePool, slot, page_ids, n) -> PagePool:
+    """Install an imported request into `slot`: table entries [0, n) map
+    `page_ids` ((mp,) i32) with ownership and one reference each.  The
+    caller picks `page_ids` by the destination mirror's admit rules
+    (lowest free id first — I4/I7), so the ids are known host-side
+    without a sync; `slot` and `n` are traced scalars, one compile
+    serves every transfer."""
+    S, mp = pool.tables.shape
+    P = pool.refs.shape[0]
+    live = jnp.arange(mp, dtype=jnp.int32) < n
+    refs = pool.refs.at[jnp.where(live, page_ids, P)].add(1, mode="drop")
+    take = (jnp.arange(S)[:, None] == slot) & live[None, :]
+    return PagePool(
+        refs,
+        jnp.where(take, page_ids[None, :], pool.tables),
+        jnp.where(jnp.arange(S) == slot, n, pool.n_pages),
+        jnp.where(take, True, pool.owned))
 
 
 # ---------------------------------------------------------------------------

@@ -2,33 +2,21 @@
 tiling-based inference mode: quantized weights stay resident, inputs
 stream).
 
-The engine owns a fixed pool of `num_slots` sequences sharing one KV
-cache, plus a `SlotState` pytree (last token, position, budget, active
-mask, per-slot PRNG key, and — in the paged layout — the refcounted
-`pages.PagePool`) that lives on device for the engine's lifetime.  The
-serving loop is compiled data-flow, not Python control-flow — two jit'd
-functions do all the work:
+Since PR 10 the engine is a thin COMPOSITION of three layers:
 
-  admit  — chunked prefill: every queued prompt is cut into fixed-size
-           chunks (`prefill_chunk`; 1 for recurrent mixers, which cannot
-           skip padding in their state) and one compiled function per
-           chunk prefills ALL admitting slots at once: full-batch forward
-           at per-slot cache offsets, masked merge of the touched slots'
-           cache rows, and — on each prompt's final chunk — on-device
-           sampling of the first token and the slot-state commit.  No
-           per-prompt-length recompiles, no host-side full-cache scatter.
-           The first chunk of a round also carries the round's entire
-           pool transaction (`pages.admit_update`: evictions, read-only
-           prefix shares, fresh grants, registrations) plus the
-           copy-on-write page split for prompts that diverge from a
-           cached prefix mid-page.
-
-  tick   — fused multi-step decode: `decode_steps` iterations of
-           decode -> sample (greedy / temperature / top-k / top-p, keyed
-           by the per-request seed) -> EOS + budget + max_seq termination
-           masking, rolled into ONE jit via `lax.scan`.  The host syncs
-           once per tick — i.e. once per `decode_steps` tokens — and gets
-           back the (steps, slots) token block plus emission masks.
+  runtime.scheduler  — every host decision: the FIFO queue, admission
+                       planning with backpressure, the `pages.HostPool`
+                       mirror(s), the prefix registry, request
+                       lifecycle and results.
+  runtime.workers    — every device computation: `PrefillWorker` owns
+                       the chunked admit path, `DecodeWorker` the fused
+                       multi-step tick (plain or speculative) — both
+                       compiled once at construction.
+  Engine (here)      — the composition and the public API (`submit`,
+                       `step`, `run`, `abort`, telemetry), unchanged
+                       from the pre-split engine: a colocated Engine
+                       points both workers at the SAME state/caches and
+                       streams bit-identically to the monolith.
 
 KV layouts (`kv_layout=`):
 
@@ -52,6 +40,25 @@ KV layouts (`kv_layout=`):
            front; kept as the parity oracle and for kernels that want the
            contiguous reservation.
 
+Disaggregated mode (`disagg=True` / `EngineOptions.disagg`, paged
+layout only): prefill and decode run as SEPARATE workers with separate
+page pools and slot sets.  A prompt admits into the prefill worker's
+pool, prefills there (first token sampled at admission, so TTFT is
+unchanged), then its KV pages move into the decode worker's pool at
+page granularity — `pages.export_pages` gathers the tiles, the decode
+mirror grants destination ids by the same lowest-free-id rule, and
+`pages.import_pages`/`adopt` land contents bit-exactly (invariant I7
+in `runtime/pages.py`; `check_invariants=True` verifies I1–I7 on BOTH
+pools after every transfer round).  When the decode pool is dry or no
+decode slot is free the transfer backpressures FIFO; greedy streams
+stay bit-identical to the colocated engine.  `role="both"` runs both
+workers in-process (today's only transport); "prefill"/"decode" name
+the endpoints of the future multi-process transport and raise
+NotImplementedError.  Prefix caching and speculation switch off under
+disaggregation, and archs with per-slot cache leaves (recurrent
+hybrids, xattn) are rejected — their state has no page representation
+to transfer.
+
 Prefix caching (`prefix_cache=True`, paged layout only): prompts are
 hashed at `submit` in fixed `prefix_chunk`-token pieces; admission maps
 the longest cached prefix's full pages into the slot's block table
@@ -71,18 +78,11 @@ per-slot draft KV cache that rides inside SlotState
 (`runtime/speculate.py`) — scores the whole window [last_tok, g_1..g_d]
 in ONE forward through the same chunked path prefill uses, and
 accepts/replaces every position on device (`sampling.spec_verify`).
-Accepted tokens advance the slot several positions per step; rejected
-draft rows are rolled back through the block table (`pages.rollback`,
-honouring the same write-mask/ownership/bound discipline as the write)
-or the dense scatter (`speculate.rollback_dense`).  Greedy streams are
-bit-identical to non-speculative decoding (invariants A1-A6 in
-speculate.py); the host still syncs once per tick whatever the
-acceptance length.  Recurrent-hybrid, cross-attention and MoE archs opt
-out silently (recurrent state cannot rewind; MoE capacity drops depend
-on the token count per call, which would break verify/decode bit
-parity), and the model drafter additionally opts out of the prefix
-cache (a skipped warm-prefix chunk would leave draft-cache rows
-unwritten).
+Greedy streams are bit-identical to non-speculative decoding
+(invariants A1-A6 in speculate.py); the host still syncs once per tick
+whatever the acceptance length.  Recurrent-hybrid, cross-attention and
+MoE archs opt out silently, and the model drafter additionally opts
+out of the prefix cache.
 
 Construction: `Engine(cfg, params, options=EngineOptions(...))` is the
 primary constructor (`repro.runtime.options`); the historic flat kwargs
@@ -92,76 +92,30 @@ finish_reason, prefill/speculation/page-sharing counters) in
 `Request.result`, and `Engine.run` returns the results completed during
 the call.
 
-The Python `Engine` is a thin wrapper holding the request queue and the
-`pages.HostPool` mirror of the device allocator; it is also a context
-manager so the process-global sharding ctx activated by `mesh=` is
-released even when serving raises.
+The Engine is a context manager so the process-global sharding ctx
+activated by `mesh=` is released even when serving raises — including
+when `__init__` itself raises after activation (construction cleans up
+behind itself and `close()` is idempotent).
 """
 from __future__ import annotations
 
-import dataclasses
-import itertools
 import time
-from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import paged_attention as pk_kernel
-from repro.models import attention as attn
 from repro.models import model as M
 from repro.parallel import sharding as shd
 from repro.runtime import pages as pg
-from repro.runtime import sampling as smp
 from repro.runtime import speculate as spc
 from repro.runtime.options import EngineOptions, RequestResult
+from repro.runtime.scheduler import Request, Scheduler
+from repro.runtime.workers import (DecodeWorker, PrefillWorker, SlotState,
+                                   init_slot_state)
 
-
-class SlotState(NamedTuple):
-    """Per-slot decode state; one device-resident pytree for all slots.
-
-    `pages` is the refcounted paged-KV allocator state (empty arrays
-    under the dense layout); see `repro.runtime.pages.PagePool`.
-    `draft` is the per-slot drafter state (zero-width when speculation
-    is off): n-gram tables (`speculate.DraftState`) or the model
-    drafter's requantized params + private draft KV cache
-    (`speculate.QuantDraftState`)."""
-    last_tok: jax.Array     # (S,) i32  last sampled token (next decode input)
-    pos: jax.Array          # (S,) i32  next cache index to write
-    budget: jax.Array       # (S,) i32  tokens still to emit after this one
-    active: jax.Array       # (S,) bool slot is mid-generation
-    rng: jax.Array          # (S, 2) u32 per-request sampling key chain
-    stop: jax.Array         # (S, K) i32 per-request stop set, -1 padded
-    pages: pg.PagePool      # refcounted page allocator (paged layout)
-    draft: Any              # drafter state (n-gram tables / draft KV)
-    n_drafted: jax.Array    # (S,) i32 drafted tokens, current occupant
-    n_accepted: jax.Array   # (S,) i32 drafted tokens emitted
-
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new_tokens: int           # effective budget (clamped to max_seq room)
-    seed: int = 0
-    out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
-    t_submit: float = 0.0
-    t_first: float = 0.0          # wall time the first token landed (TTFT)
-    # prefix-cache keys, hashed once at submit: prefix_keys[i] identifies
-    # the (i+1)*prefix_chunk-token prefix of `prompt`
-    prefix_keys: tuple = ()
-    stop_tokens: tuple = ()       # per-request stop set (engine default or
-    #                               the submit(stop_tokens=...) override)
-    requested: int = 0            # max_new_tokens as asked (pre-clamp)
-    clamped: bool = False         # budget clamped by max_seq at submit
-    aborted: bool = False
-    prefill_tokens: int = 0       # prompt tokens whose prefill compute ran
-    pages_shared: int = 0         # prefix pages mapped read-only at admit
-    drafted_tokens: int = 0
-    accepted_tokens: int = 0
-    result: RequestResult | None = None   # set when the request completes
+__all__ = ["Engine", "Request", "SlotState", "RequestResult"]
 
 
 class Engine:
@@ -207,9 +161,15 @@ class Engine:
       prefix_max_chains — registry capacity: LRU chains beyond this are
                       evicted at registration time, bounding host memory
                       under high-cardinality traffic (default 4096)
-      check_invariants — verify the HostPool mirror against the device
-                      allocator (refcounts, free popcount, block tables)
-                      after every sync; debug aid, costs extra transfers
+      disagg        — split prefill and decode into separate workers with
+                      separate page pools; see the module docstring and
+                      `options.DisaggOptions` (role / prefill_slots /
+                      prefill_pages)
+      check_invariants — verify the HostPool mirror(s) against the device
+                      allocator(s) (refcounts, free popcount, block
+                      tables; under disagg also the I7 bit-exact transfer
+                      check) after every sync; debug aid, costs extra
+                      transfers
     """
 
     def __init__(self, cfg, params, num_slots: int | None = None,
@@ -223,8 +183,22 @@ class Engine:
         if max_seq is not None:
             legacy["max_seq"] = max_seq
         options = EngineOptions.build(base=options, **legacy)
+        # close() must be callable on a partially constructed engine: the
+        # sharding ctx is process-global, so a construction that raises
+        # AFTER activate (drafter validation, cache init OOM, ...) would
+        # otherwise leave it held and poison every later Engine/trainer
+        # in the process.
+        self._ctx = None
+        self.mesh = None
+        try:
+            self._build(cfg, params, options)
+        except BaseException:
+            self.close()
+            raise
+
+    def _build(self, cfg, params, options: EngineOptions) -> None:
         self.options = options
-        sch, par = options.schedule, options.parallel
+        sch, par, dis = options.schedule, options.parallel, options.disagg
         num_slots, max_seq = sch.num_slots, sch.max_seq
         # capacity_factor / dispatch override the MoE routing knobs on cfg
         # (moe_capacity_factor / ep_dispatch) for this engine — the jit'd
@@ -238,7 +212,6 @@ class Engine:
         if mesh is not None and not isinstance(mesh, jax.sharding.Mesh):
             mesh = shd.build_mesh(mesh)
         self.mesh = mesh
-        self._ctx = None
         if mesh is not None:
             self._ctx = shd.activate(mesh,
                                      shd.serve_rules("pod" in mesh.axis_names))
@@ -260,10 +233,34 @@ class Engine:
                         for m in ("mamba", "mlstm", "slstm"))
         self.prefill_chunk = 1 if recurrent \
             else max(1, min(sch.prefill_chunk, max_seq - 1))
+        # --- disaggregation (paged + meshless + pool-representable only:
+        # the transfer unit is the page, so every cache leaf must live in
+        # the shared pool — recurrent/xattn per-slot state cannot move)
+        self.disagg = bool(dis.enabled)
+        if self.disagg:
+            if dis.role in ("prefill", "decode"):
+                raise NotImplementedError(
+                    f"role={dis.role!r} is the single-process endpoint of "
+                    f"the multi-process transport, which is not implemented "
+                    f"yet — the page-transfer seam (pages.export_pages / "
+                    f"import_pages) is where it plugs in; use role='both'")
+            if options.paging.kv_layout != "paged":
+                raise ValueError("disaggregation requires kv_layout="
+                                 "'paged': pages are the transfer unit")
+            if mesh is not None:
+                raise ValueError("disaggregation and mesh= are mutually "
+                                 "exclusive (single-process transport)")
+            if not all(jax.tree_util.tree_leaves(M.cache_pool_flags(cfg))):
+                raise ValueError(
+                    "disaggregation requires every cache leaf to live in "
+                    "the shared page pool; recurrent/xattn per-slot state "
+                    f"has no page representation to transfer "
+                    f"(layer_pattern={cfg.layer_pattern})")
         # --- speculation (silent opt-outs: recurrent state cannot rewind
         # a rejected draft; xattn decode needs vision inputs; MoE capacity
-        # drops depend on tokens-per-call, breaking verify/decode parity)
-        spec_ok = not recurrent \
+        # drops depend on tokens-per-call, breaking verify/decode parity;
+        # disagg drafter state has no page representation to transfer)
+        spec_ok = not recurrent and not self.disagg \
             and not any("xattn" in s or "moe" in s
                         for s in cfg.layer_pattern)
         self.draft_len = min(options.speculation.draft_len,
@@ -284,28 +281,30 @@ class Engine:
             self.drafter = spc.NGramDrafter(options.speculation.ngram,
                                             options.speculation.table)
         self._stop_cap = max(4, len(self.stop_tokens))
-        self._next_uid = itertools.count()
         self._base_key = jax.random.PRNGKey(sch.seed)
         # --- KV layout ---
         self.kv_layout = options.paging.kv_layout
         self.page_size = cfg.page_size
         self.pages_per_slot = -(-max_seq // self.page_size)  # table length
-        if self.kv_layout == "paged":
+        paged = self.kv_layout == "paged"
+        if paged:
             self.num_pages = int(options.paging.num_pages) \
                 if options.paging.num_pages is not None \
                 else num_slots * self.pages_per_slot
-            self.caches = M.init_cache(cfg, num_slots, max_seq,
-                                       num_pages=self.num_pages)
             self._pool_flags = M.cache_pool_flags(cfg)
             mp, P = self.pages_per_slot, self.num_pages
-            self.pool: pg.HostPool | None = pg.HostPool(self.num_pages,
-                                                        num_slots)
         else:
             self.num_pages = 0
-            self.caches = M.init_cache(cfg, num_slots, max_seq)
             self._pool_flags = None
             mp, P = 0, 0
-            self.pool = None
+        # disagg sizing: the prefill worker's own slot set and pool
+        self.prefill_slots = (int(dis.prefill_slots)
+                              if dis.prefill_slots is not None
+                              else num_slots) if self.disagg else num_slots
+        self.prefill_pages = (int(dis.prefill_pages)
+                              if dis.prefill_pages is not None
+                              else self.prefill_slots * self.pages_per_slot) \
+            if self.disagg else self.num_pages
         # dense speculative rollback routes through the KV leaf flags
         # (same tree structure as the paged pool flags)
         self._kv_flags = M.cache_pool_flags(cfg) \
@@ -318,8 +317,7 @@ class Engine:
         # annotations).
         dk = options.paging.decode_kernel
         self.decode_kernel = bool(
-            self.kv_layout == "paged" and mesh is None
-            and not self.draft_len
+            paged and mesh is None and not self.draft_len
             and (dk if dk is not None
                  else jax.default_backend() == "tpu"))
         # --- prefix cache (paged only; recurrent state accumulates over
@@ -327,36 +325,66 @@ class Engine:
         # silently but stream identically.  The model drafter opts out
         # too: a warm-prefix chunk skips its prefill compute, which would
         # leave the corresponding DRAFT-cache rows unwritten and break
-        # invariant A6 — streams stay bit-identical, admission just runs
+        # invariant A6.  Disaggregation opts out as well: cached pages
+        # would pin the prefill pool while the decode reads happen in the
+        # other pool — streams stay bit-identical, admission just runs
         # the full prefill) ---
         self.prefix_chunk = int(options.prefix.chunk) \
             if options.prefix.chunk is not None else self.page_size
-        enabled = options.prefix.enabled and self.kv_layout == "paged" \
-            and not recurrent and self.drafter_kind != "model"
-        self.prefix = pg.PrefixCache(self.prefix_chunk, self.page_size,
-                                     max_chains=options.prefix.max_chains) \
+        enabled = options.prefix.enabled and paged and not recurrent \
+            and self.drafter_kind != "model" and not self.disagg
+        prefix = pg.PrefixCache(self.prefix_chunk, self.page_size,
+                                max_chains=options.prefix.max_chains) \
             if enabled else None
-        self.state = SlotState(
-            last_tok=jnp.zeros((num_slots,), jnp.int32),
-            pos=jnp.zeros((num_slots,), jnp.int32),
-            budget=jnp.zeros((num_slots,), jnp.int32),
-            active=jnp.zeros((num_slots,), bool),
-            rng=jnp.zeros((num_slots, 2), jnp.uint32),
-            stop=jnp.full((num_slots, self._stop_cap), -1, jnp.int32),
-            pages=pg.init_pool(num_slots, mp, P),
-            draft=self.drafter.init_state(num_slots) if self.draft_len
-            else spc.empty_state(num_slots),
-            n_drafted=jnp.zeros((num_slots,), jnp.int32),
-            n_accepted=jnp.zeros((num_slots,), jnp.int32))
-        self.slot_req: list[Request | None] = [None] * num_slots
-        self._queue: list[Request] = []
-        self._finished: list[RequestResult] = []
+        # --- the host-side scheduler (admission side = prefill side) ---
+        self.sched = Scheduler(
+            num_slots=self.prefill_slots, max_seq=max_seq,
+            page_size=self.page_size, prefill_chunk=self.prefill_chunk,
+            paged=paged,
+            num_pages=self.prefill_pages if self.disagg else self.num_pages,
+            stop_cap=self._stop_cap, stop_tokens=self.stop_tokens,
+            prefix=prefix)
+        if self.disagg:
+            self.sched.attach_decode(num_slots, self.num_pages)
+        # --- the device-facing workers ---
+        self.prefill = PrefillWorker(
+            cfg=cfg, num_slots=self.prefill_slots, max_seq=max_seq,
+            prefill_chunk=self.prefill_chunk, stop_cap=self._stop_cap,
+            sampling=self.sampling, base_key=self._base_key,
+            kv_layout=self.kv_layout, pool_flags=self._pool_flags,
+            draft_len=self.draft_len, drafter=self.drafter)
+        self.decode = DecodeWorker(
+            cfg=cfg, num_slots=num_slots, max_seq=max_seq,
+            decode_steps=self.decode_steps, sampling=self.sampling,
+            kv_layout=self.kv_layout, decode_kernel=self.decode_kernel,
+            draft_len=self.draft_len, drafter=self.drafter,
+            pool_flags=self._pool_flags, kv_flags=self._kv_flags)
+        # --- device state: one state/caches pair per pool (a colocated
+        # engine has exactly one — both workers share it)
+        draft0 = self.drafter.init_state(num_slots) if self.draft_len \
+            else spc.empty_state(num_slots)
+        self.state = init_slot_state(num_slots, self._stop_cap, mp,
+                                     self.num_pages if paged else 0, draft0)
+        self.caches = M.init_cache(cfg, num_slots, max_seq,
+                                   num_pages=self.num_pages) if paged \
+            else M.init_cache(cfg, num_slots, max_seq)
+        if self.disagg:
+            self.p_state = init_slot_state(
+                self.prefill_slots, self._stop_cap, mp, self.prefill_pages,
+                spc.empty_state(self.prefill_slots))
+            self.p_caches = M.init_cache(cfg, self.prefill_slots, max_seq,
+                                         num_pages=self.prefill_pages)
         # pool-occupancy telemetry; occupancy itself lives in the HostPool
-        # mirror (`pages_in_use` property), kept in lockstep with the
-        # device allocator so backpressure never needs an extra sync
+        # mirror(s), kept in lockstep with the device allocator(s) so
+        # backpressure never needs an extra sync.  pages_high_water always
+        # tracks the DECODE-side pool (the colocated engine's only pool).
         self.pages_high_water = 0
         self.pages_shared_high_water = 0
+        self.prefill_pages_high_water = 0
         self.prefill_chunks_skipped = 0
+        # disagg transfer telemetry
+        self.pages_transferred = 0
+        self.transfer_rounds = 0
         # host<->device sync accounting for the serving bench: one sync per
         # jit'd tick / per admission round, regardless of decode_steps
         self.n_ticks = 0
@@ -371,313 +399,45 @@ class Engine:
         self.kv_bytes_read = 0
         self.kv_read_steps = 0
         self._kv_row_bytes = pk_kernel.kv_row_bytes(cfg)
-        # engine-lifetime speculation totals (folded in as requests retire)
-        self.tokens_drafted = 0
-        self.tokens_accepted = 0
-        # buffer donation lets caches/state update in place; the CPU
-        # backend doesn't implement donation and would warn on every call
-        donate = () if jax.default_backend() == "cpu" else (1, 2)
-        tick = self._make_spec_tick() if self.draft_len else self._make_tick()
-        self._tick = jax.jit(tick, donate_argnums=donate)
-        self._admit_chunk = jax.jit(self._make_admit_chunk(),
-                                    donate_argnums=donate)
 
     # ------------------------------------------------------------------
-    # compiled data-flow
+    # back-compat surface: the host structures moved into the Scheduler
     # ------------------------------------------------------------------
 
-    def _paged_kv(self, pool: pg.PagePool):
-        """The PagedKV bundle for one traced call; write_mask is supplied
-        by the caller (valid slots at admit, active slots in the tick).
-        `owned` routes writes aimed at shared prefix pages to the drop
-        index — a slot can never corrupt a page other consumers read.
-        `bound` (speculation) additionally drops rows at or past the
-        per-slot accepted-length bound.  `kernel` marks the bundle for the
-        pallas paged-decode kernel (the Sq=1 tick only — admit chunks and
-        the speculative verify window read through the gather oracle)."""
-        def bundle(write_mask, bound=None, kernel=False):
-            return attn.PagedKV(tables=pool.tables, n_pages=pool.n_pages,
-                                write_mask=write_mask, max_seq=self.max_seq,
-                                page_size=self.page_size, owned=pool.owned,
-                                bound=bound, decode_kernel=kernel)
-        return bundle
+    @property
+    def pool(self) -> pg.HostPool | None:
+        """The decode-side HostPool mirror (the colocated engine's only
+        pool); None under the dense layout."""
+        return self.sched.decode_pool
 
-    def _make_tick(self):
-        """N fused decode steps: decode -> sample -> terminate, scanned;
-        under the paged layout, every reference a slot that terminates
-        inside the tick holds is released before the host ever syncs —
-        pages reaching refcount zero rejoin the free set."""
-        cfg, sc = self.cfg, self.sampling
-        max_seq, steps = self.max_seq, self.decode_steps
-        paged_mode = self.kv_layout == "paged"
-        use_kernel = self.decode_kernel
+    @property
+    def prefix(self) -> pg.PrefixCache | None:
+        return self.sched.prefix
 
-        def tick(params, state, caches):
-            def body(carry, _):
-                state, caches = carry
-                # inactive slots must not write: their stale block-table
-                # entries may point at pages since re-granted to another
-                # request (dense slots own their rows, so masking there is
-                # unnecessary — and the PR-4 path stays untouched)
-                pv = self._paged_kv(state.pages)(state.active,
-                                                 kernel=use_kernel) \
-                    if paged_mode else None
-                logits, caches = M.decode_step(
-                    params, state.last_tok[:, None], cfg, caches, state.pos,
-                    paged=pv)
-                toks, keys = smp.sample(logits, state.rng, sc)
-                emit = state.active
-                tok = jnp.where(emit, toks, state.last_tok)
-                rng = jnp.where(emit[:, None], keys, state.rng)
-                pos = jnp.where(emit, state.pos + 1, state.pos)
-                budget = jnp.where(emit, state.budget - 1, state.budget)
-                # -1-padded stop rows match no real token id
-                hit_stop = emit & jnp.any(tok[:, None] == state.stop, axis=1)
-                active = emit & (budget > 0) & ~hit_stop & (pos < max_seq - 1)
-                new = state._replace(last_tok=tok, pos=pos, budget=budget,
-                                     active=active, rng=rng)
-                return (new, caches), (tok, emit)
+    @property
+    def slot_req(self) -> list:
+        """Decode-side slot occupancy (the colocated engine's only slot
+        registry)."""
+        return self.sched.decode_slot_req
 
-            pre_active = state.active
-            (state, caches), (toks, emitted) = jax.lax.scan(
-                body, (state, caches), None, length=steps)
-            if paged_mode:
-                dead = pre_active & ~state.active
-                state = state._replace(pages=pg.release(state.pages, dead))
-            return state, caches, toks, emitted
+    @property
+    def _queue(self) -> list:
+        return self.sched.queue
 
-        return tick
+    @property
+    def tokens_drafted(self) -> int:
+        return self.sched.tokens_drafted
 
-    def _make_spec_tick(self):
-        """The speculative tick: each of the `decode_steps` scanned steps
-        drafts `draft_len` tokens from the slot's n-gram table, scores
-        the window [last_tok, g_1..g_d] in ONE chunked forward (the same
-        path prefill uses — logits[:, i] conditions on the first i
-        drafts), accepts/replaces on device (`sampling.spec_verify`) and
-        clamps the emission count by stop tokens / budget / max_seq
-        exactly as the sequential loop would (invariant A3).  Rejected
-        draft rows are rolled back before the step ends (A4).  One host
-        sync per tick, however many tokens each window lands."""
-        cfg, sc = self.cfg, self.sampling
-        max_seq, steps, d = self.max_seq, self.decode_steps, self.draft_len
-        L = d + 1
-        paged_mode = self.kv_layout == "paged"
-        pool_flags, kv_flags = self._pool_flags, self._kv_flags
-        drafter = self.drafter
-
-        def tick(params, state, caches):
-            def body(carry, _):
-                state, caches = carry
-                drafts = drafter.propose(state.draft, d)          # (S, d)
-                chunk = jnp.concatenate([state.last_tok[:, None], drafts],
-                                        axis=1)
-                win = state.pos[:, None] \
-                    + jnp.arange(L, dtype=jnp.int32)[None]
-                # rows a non-speculative run could never reach are dropped
-                # at write time (the per-slot accepted-length bound)
-                bound = state.pos + state.budget
-                if paged_mode:
-                    pv = self._paged_kv(state.pages)(state.active, bound)
-                else:
-                    pv = attn.DenseKV(write_mask=state.active,
-                                      max_seq=max_seq, bound=bound)
-                logits, _, caches = M.forward(
-                    params, {"tokens": chunk}, cfg, caches=caches,
-                    cache_pos=state.pos, paged=pv)
-                out, n_acc, keys = smp.spec_verify(logits, drafts,
-                                                   state.rng, sc)
-                idx = jnp.arange(L, dtype=jnp.int32)[None]
-                is_stop = jnp.any(out[..., None] == state.stop[:, None, :],
-                                  axis=-1)                        # (S, L)
-                stop_at = jnp.min(jnp.where(is_stop, idx, L), axis=1)
-                # emitted tokens this window: accepted drafts + the
-                # model's correction/bonus, clamped exactly as the
-                # sequential loop clamps per token (A3); >= 1 for active
-                # slots (budget >= 1 and pos < max_seq - 1 while active)
-                n_emit = jnp.minimum(
-                    jnp.minimum(n_acc + 1, stop_at + 1),
-                    jnp.minimum(state.budget, max_seq - 1 - state.pos))
-                n_emit = jnp.where(state.active, n_emit, 0)
-                emit = idx < n_emit[:, None]                      # (S, L)
-                # roll back the rejected rows (window indices >= n_emit)
-                rej = jnp.where(emit | ~state.active[:, None], max_seq, win)
-                if paged_mode:
-                    caches = pg.rollback(caches, pool_flags, pv, rej)
-                else:
-                    caches = spc.rollback_dense(caches, kv_flags, rej,
-                                                state.active, max_seq)
-                last = jnp.take_along_axis(
-                    out, jnp.clip(n_emit - 1, 0, L - 1)[:, None],
-                    axis=1)[:, 0]
-                tok = jnp.where(state.active, last, state.last_tok)
-                rng = jnp.where(state.active[:, None], keys, state.rng)
-                pos = state.pos + n_emit
-                budget = state.budget - n_emit
-                stopped = jnp.any(is_stop & emit, axis=1)
-                active = state.active & ~stopped & (budget > 0) \
-                    & (pos < max_seq - 1)
-                # the drafter learns only VERIFIED emissions, in order
-                ds = drafter.observe(state.draft, out, emit)
-                new = state._replace(
-                    last_tok=tok, pos=pos, budget=budget, active=active,
-                    rng=rng, draft=ds,
-                    n_drafted=state.n_drafted
-                    + jnp.where(state.active, d, 0),
-                    n_accepted=state.n_accepted + jnp.maximum(n_emit - 1, 0))
-                return (new, caches), (out, emit)
-
-            pre_active = state.active
-            (state, caches), (toks, emitted) = jax.lax.scan(
-                body, (state, caches), None, length=steps)
-            if paged_mode:
-                dead = pre_active & ~state.active
-                state = state._replace(pages=pg.release(state.pages, dead))
-            return state, caches, toks, emitted
-
-        return tick
-
-    def _make_admit_chunk(self):
-        """One prefill chunk for every admitting slot, in one call.
-
-        tokens (S, C) holds each admitting slot's chunk (garbage rows for
-        slots mid-decode are masked out of the cache merge); offsets are
-        the per-slot chunk starts — a warm-prefix slot's first chunk
-        starts at its matched length, not 0.  Rows whose chunk completes
-        the prompt (`final`) sample their first token on device and
-        commit the slot state; the sampled tokens come back so the host
-        can append them.
-
-        Under the paged layout the first chunk of a round also carries
-        the round's whole pool transaction, applied via
-        `pages.admit_update` in the fixed evict -> share -> grant ->
-        register order the HostPool mirror replays, followed by the
-        copy-on-write split (`pages.cow_copy`) for slots whose cached
-        prefix ends mid-page.  Later chunks pass an all-False `admitting`
-        mask and zero deltas — the allocator is a no-op there."""
-        cfg, sc = self.cfg, self.sampling
-        max_seq, ns = self.max_seq, self.num_slots
-        base_key = self._base_key
-        paged_mode = self.kv_layout == "paged"
-        pool_flags = self._pool_flags
-        draft_len, drafter = self.draft_len, self.drafter
-
-        def admit(params, state, caches, tokens, valid, first, offsets,
-                  true_lens, seeds, budgets0, stops, admitting, shared,
-                  n_shared, new_pages, cow_src, evict_delta, register_delta):
-            C = tokens.shape[1]
-            if paged_mode:
-                pool = pg.admit_update(state.pages, admitting, shared,
-                                       n_shared, new_pages, evict_delta,
-                                       register_delta)
-                state = state._replace(pages=pool)
-                # copy-on-write split: a cached prefix that ends mid-page
-                # lands as a private copy in the slot's first FRESH page
-                # (table entry n_shared — a fresh grant always exists:
-                # the matched prefix is capped at prompt_len - 1, so at
-                # least the final prompt row needs a writable page).  The
-                # copy is traced before any forward write, so it reads
-                # the source page's pre-call contents even if its chain
-                # was evicted and the page re-granted this same round.
-                mp = pool.tables.shape[1]
-                dst = jnp.take_along_axis(
-                    pool.tables, jnp.clip(n_shared, 0, mp - 1)[:, None],
-                    axis=1)[:, 0]
-                caches = pg.cow_copy(caches, pool_flags, cow_src, dst)
-            # a slot's FIRST chunk starts from pristine state: recurrent
-            # mixers accumulate (h/conv/C/n/m carry the previous occupant
-            # forward — the seed engine's whole-prompt *_sequence prefill
-            # implicitly started from zeros), and KV rows revert to their
-            # init values rather than stale garbage (XLA folds the init
-            # tree into constants; no second cache is held).  Shared page
-            # pools are exempt: co-resident requests own live rows there,
-            # and stale rows only ever surface masked to exact zeros.
-            # `first` is an explicit host-built mask — warm-prefix slots
-            # start their chunk offsets at the matched length, so
-            # `offsets == 0` would miss them.
-
-            def reset(cur, ini):
-                m = first.reshape((1, ns) + (1,) * (cur.ndim - 2))
-                return jnp.where(m, ini.astype(cur.dtype), cur)
-
-            if paged_mode:
-                init_tree = M.init_cache(cfg, ns, max_seq,
-                                         num_pages=pool.refs.shape[0])
-                caches = jax.tree_util.tree_map(
-                    lambda cur, ini, pf: cur if pf else reset(cur, ini),
-                    caches, init_tree, pool_flags)
-            else:
-                caches = jax.tree_util.tree_map(
-                    reset, caches, M.init_cache(cfg, ns, max_seq))
-            # unembed only each slot's true last prompt row (the one whose
-            # logits can be sampled), not all C chunk positions
-            idx = jnp.clip(true_lens - 1 - offsets, 0, C - 1)
-            pv = self._paged_kv(state.pages)(valid) if paged_mode else None
-            logits, _, new_caches = M.forward(
-                params, {"tokens": tokens}, cfg, caches=caches,
-                cache_pos=offsets, gather_pos=idx, paged=pv)
-
-            def merge(old, new):
-                m = valid.reshape((1, ns) + (1,) * (old.ndim - 2))
-                return jnp.where(m, new.astype(old.dtype), old)
-
-            if paged_mode:
-                # pool leaves already masked their writes at scatter time;
-                # per-slot leaves (recurrent state, xattn) merge as before
-                caches = jax.tree_util.tree_map(
-                    lambda old, new, pf: new if pf else merge(old, new),
-                    caches, new_caches, pool_flags)
-            else:
-                caches = jax.tree_util.tree_map(merge, caches, new_caches)
-            last = logits[:, 0]                                 # (S, V)
-            final = valid & (offsets + C >= true_lens)
-            keys0 = smp.request_keys(base_key, seeds)
-            toks, keys = smp.sample(last, keys0, sc)
-            # per-request stop set; -1 padding matches no real token id
-            hit_stop = final & jnp.any(toks[:, None] == stops, axis=1)
-            act = final & (budgets0 > 0) & ~hit_stop \
-                & (true_lens < max_seq - 1)
-            state = state._replace(
-                last_tok=jnp.where(final, toks, state.last_tok),
-                pos=jnp.where(final, true_lens, state.pos),
-                budget=jnp.where(final, budgets0, state.budget),
-                active=jnp.where(final, act, state.active),
-                rng=jnp.where(final[:, None], keys, state.rng),
-                stop=jnp.where(final[:, None], stops, state.stop))
-            if draft_len:
-                # seed the drafter from the prompt: clear the slot on its
-                # first chunk, then observe this chunk's real tokens in
-                # order, plus the sampled first token on the final chunk —
-                # so tick-time proposals can draft from prompt n-grams
-                # (prompt-lookup decoding)
-                ds = drafter.reset(state.draft, first)
-                cmask = valid[:, None] \
-                    & (offsets[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
-                       < true_lens[:, None])
-                ds = drafter.observe(ds, tokens, cmask)
-                ds = drafter.observe(ds, toks[:, None], final[:, None])
-                state = state._replace(
-                    draft=ds,
-                    n_drafted=jnp.where(first, 0, state.n_drafted),
-                    n_accepted=jnp.where(first, 0, state.n_accepted))
-            if paged_mode:
-                # a request that terminates AT admission (first token EOS,
-                # or no decode room) must drop its references right here
-                dead = final & ~act
-                state = state._replace(pages=pg.release(state.pages, dead))
-            return state, caches, toks
-
-        return admit
+    @property
+    def tokens_accepted(self) -> int:
+        return self.sched.tokens_accepted
 
     # ------------------------------------------------------------------
     # host-side request plumbing
     # ------------------------------------------------------------------
 
     def _need_pages(self, prompt_len: int, max_new: int) -> int:
-        """Pages a request occupies for its whole lifetime: prompt rows
-        plus one KV row per decode step (the first token comes from the
-        prefill logits), clipped to the max_seq-1 generation ceiling."""
-        rows = min(prompt_len + max_new - 1, self.max_seq - 1)
-        return -(-rows // self.page_size)
+        return self.sched._need_pages(prompt_len, max_new)
 
     def submit(self, prompt, max_new_tokens: int = 16,
                seed: int | None = None,
@@ -688,278 +448,102 @@ class Engine:
         is clamped deterministically here — the request then runs to the
         max_seq ceiling and finishes with reason "max_seq" instead of
         silently stopping short."""
-        prompt = np.asarray(prompt, np.int32)
-        if not 1 <= len(prompt) <= self.max_seq - 1:
-            # an oversized prompt would clamp its chunk offsets into
-            # earlier cache rows and "complete" with scrambled state
-            raise ValueError(f"prompt length {len(prompt)} must be in "
-                             f"[1, max_seq-1={self.max_seq - 1}]")
-        if max_new_tokens < 1:
-            # budgets0 = max_new_tokens - 1 would underflow to -1 while the
-            # admit path still emits the prefill token — a request asking
-            # for 0 tokens used to get 1
-            raise ValueError(f"max_new_tokens must be >= 1, "
-                             f"got {max_new_tokens}")
-        stop = self.stop_tokens if stop_tokens is None \
-            else tuple(int(t) for t in stop_tokens)
-        if len(stop) > self._stop_cap:
-            # the (S, K) stop matrix is baked into the compiled tick
-            raise ValueError(
-                f"stop_tokens holds {len(stop)} ids but this engine was "
-                f"built with capacity {self._stop_cap} (max(4, "
-                f"len(default stop set)))")
-        requested = max_new_tokens
-        clamped = len(prompt) + max_new_tokens > self.max_seq
-        if clamped:
-            # the decode loop would stop at the max_seq - 1 ceiling anyway;
-            # clamping HERE makes the effective budget visible to paging
-            # (no pages reserved for tokens that can never exist) and to
-            # the finish_reason ("max_seq", not a silent short "budget")
-            max_new_tokens = self.max_seq - len(prompt)
-        if self.kv_layout == "paged":
-            need = self._need_pages(len(prompt), max_new_tokens)
-            if need > self.num_pages:
-                raise ValueError(
-                    f"request needs {need} pages ({len(prompt)} prompt + "
-                    f"{max_new_tokens} new tokens at page_size="
-                    f"{self.page_size}) but the pool only has "
-                    f"{self.num_pages}")
-        # uid comes from a monotonic counter: queue length would recycle
-        # ids once requests drain, aliasing two live requests
-        uid = next(self._next_uid)
-        req = Request(uid=uid, prompt=prompt,
-                      max_new_tokens=max_new_tokens,
-                      seed=uid if seed is None else int(seed),
-                      t_submit=time.perf_counter(),
-                      stop_tokens=stop, requested=requested,
-                      clamped=clamped)
-        if self.prefix is not None:
-            # hash every chunk-aligned prefix ONCE, here — admission only
-            # compares precomputed keys
-            req.prefix_keys = self.prefix.keys_for(prompt)
-        self._queue.append(req)
-        return req
+        return self.sched.submit(prompt, max_new_tokens, seed, stop_tokens)
 
-    def _admit(self):
-        ns, C = self.num_slots, self.prefill_chunk
+    def _admit_side(self):
+        """(state, caches) of the pool admission lands in: the prefill
+        worker's own pool under disagg, THE pool otherwise."""
+        return (self.p_state, self.p_caches) if self.disagg \
+            else (self.state, self.caches)
+
+    def _set_admit_side(self, state, caches) -> None:
+        if self.disagg:
+            self.p_state, self.p_caches = state, caches
+        else:
+            self.state, self.caches = state, caches
+
+    def _admit(self) -> None:
         paged = self.kv_layout == "paged"
-        admitted: list[tuple[int, Request]] = []
-        # round plan: slot -> (matched_len, shared ids, cow page, fresh)
-        plan: dict[int, tuple[int, list, int, int]] = {}
-        evict_delta: dict[int, int] = {}
-        reg_delta: dict[int, int] = {}
-        if paged:
-            # phase 1 — FIFO decisions on COUNTS only: `eff` accumulates
-            # this round's pending share bumps and eviction decrements so
-            # freeness checks see the round's true end state; actual page
-            # ids are assigned once, at the end, exactly like the device's
-            # single post-evict post-share grant pass
-            eff = self.pool.refs.copy()
-            free_cnt = int((eff == 0).sum())
-        for slot in range(ns):
-            if self.slot_req[slot] is not None or not self._queue:
-                continue
-            req = self._queue[0]
-            if paged:
-                if self.prefix is not None:
-                    # pure planning — hit/miss telemetry and the LRU tick
-                    # are committed below, only once admission succeeds (a
-                    # backpressured head re-plans every round and must not
-                    # re-count)
-                    m_len, full, cow, mkey = self.prefix.match(
-                        req.prefix_keys, len(req.prompt))
-                else:
-                    m_len, full, cow, mkey = 0, [], -1, None
-                need = self._need_pages(len(req.prompt), req.max_new_tokens)
-                n_fresh = need - len(full)
-                # shares first: they may resurrect a cached page whose
-                # refcount would otherwise read as free
-                for p in full:
-                    if eff[p] == 0:
-                        free_cnt -= 1
-                    eff[p] += 1
-                if n_fresh > free_cnt and self.prefix is not None:
-                    # pool dry: evict idle cached prefixes (LRU) before
-                    # stalling admission
-                    free_cnt += self.prefix.evict(n_fresh - free_cnt, eff,
-                                                  evict_delta)
-                if n_fresh > free_cnt:
-                    # still dry: roll this request's shares back and hold
-                    # the WHOLE queue (FIFO — skipping the head for a
-                    # smaller request behind it would make admission order
-                    # depend on pool state)
-                    for p in full:
-                        eff[p] -= 1
-                        if eff[p] == 0:
-                            free_cnt += 1
-                    break
-                free_cnt -= n_fresh
-                plan[slot] = (m_len, full, cow, n_fresh)
-                if self.prefix is not None:
-                    self.prefix.commit(mkey, m_len)
-            self._queue.pop(0)
-            self.slot_req[slot] = req
-            admitted.append((slot, req))
-        if not admitted:
-            if paged and evict_delta:
-                # eviction already dropped chains from the registry; its
-                # refcount decrements must land even though the round
-                # admits nothing, or the evicted pages' cache refs leak
-                # forever (pool reads as occupied, admission wedges, and
-                # the I3 identity breaks)
-                self.pool.apply_delta(evict_delta)
-                ev = np.zeros((self.num_pages,), np.int32)
-                for p, d in evict_delta.items():
-                    ev[p] = d
-                self.state = self.state._replace(
-                    pages=pg.apply_refs_delta(self.state.pages,
-                                              jnp.asarray(ev)))
-                if self.check_invariants:
-                    self._verify_invariants()
+        rnd = self.sched.plan_round()
+        if rnd is None:
+            return
+        if not rnd.admitted:
+            # eviction-only round: the registry already dropped its
+            # chains host-side; commit the decrements on the device pool
+            st, ca = self._admit_side()
+            P = st.pages.refs.shape[0]
+            ev = np.zeros((P,), np.int32)
+            for p, d in rnd.evict_delta.items():
+                ev[p] = d
+            st = st._replace(pages=pg.apply_refs_delta(st.pages,
+                                                       jnp.asarray(ev)))
+            self._set_admit_side(st, ca)
+            if self.check_invariants:
+                self._verify_invariants()
             return
         if paged:
-            # phase 2 — assign page ids (mirrors the device's grant rule:
-            # lowest free id first, slots in ascending order) and register
-            # the admitted prompts' chains for future rounds.  Same-round
-            # self-matching is impossible by construction — a chain only
-            # becomes matchable after its producer's prefill ran.
-            granted = self.pool.admit_round(
-                [(s, plan[s][1], plan[s][3]) for s, _ in admitted],
-                evict_delta)
-            if self.prefix is not None:
-                for slot, req in admitted:
-                    self.prefix.register(req.prefix_keys,
-                                         plan[slot][1] + granted[slot],
-                                         reg_delta)
-                self.pool.apply_register(reg_delta)
-            self.pages_high_water = max(self.pages_high_water,
-                                        self.pool.pages_in_use)
+            hw = self.sched.pool.pages_in_use
+            if self.disagg:
+                self.prefill_pages_high_water = max(
+                    self.prefill_pages_high_water, hw)
+            else:
+                self.pages_high_water = max(self.pages_high_water, hw)
             self.pages_shared_high_water = max(self.pages_shared_high_water,
-                                               self.pool.pages_shared)
-        starts = {s: plan[s][0] if paged else 0 for s, _ in admitted}
-        n_chunks = {s: max(1, -(-(len(r.prompt) - starts[s]) // C))
-                    for s, r in admitted}
-        for slot, req in admitted:
-            req.prefill_tokens = len(req.prompt) - starts[slot]
-            req.pages_shared = len(plan[slot][1]) if paged else 0
-        if paged:
-            for slot, req in admitted:
-                self.prefill_chunks_skipped += \
-                    max(1, -(-len(req.prompt) // C)) - n_chunks[slot]
-        finals: dict[int, Any] = {}          # slot -> its final-chunk tokens
-        P = self.num_pages
-        for ci in range(max(n_chunks.values())):
-            tokens = np.zeros((ns, C), np.int32)
-            valid = np.zeros((ns,), bool)
-            offsets = np.zeros((ns,), np.int32)
-            true_lens = np.ones((ns,), np.int32)
-            seeds = np.zeros((ns,), np.int32)
-            budgets0 = np.zeros((ns,), np.int32)
-            stops = np.full((ns, self._stop_cap), -1, np.int32)
-            admitting = np.zeros((ns,), bool)
-            shared = np.zeros((ns, self.pages_per_slot), np.int32)
-            n_shared = np.zeros((ns,), np.int32)
-            new_pages = np.zeros((ns,), np.int32)
-            cow_src = np.full((ns,), -1, np.int32)
-            ev_arr = np.zeros((P,), np.int32)
-            rg_arr = np.zeros((P,), np.int32)
-            if paged and ci == 0:
-                for p, d in evict_delta.items():
-                    ev_arr[p] = d
-                for p, d in reg_delta.items():
-                    rg_arr[p] = d
-            for slot, req in admitted:
-                if ci >= n_chunks[slot]:
-                    continue
-                off = starts[slot] + ci * C
-                if paged and ci == 0:
-                    m_len, full, cow, n_fresh = plan[slot]
-                    admitting[slot] = True
-                    shared[slot, :len(full)] = full
-                    n_shared[slot] = len(full)
-                    new_pages[slot] = n_fresh
-                    cow_src[slot] = cow
-                if ci == n_chunks[slot] - 1 and not paged:
-                    # dense only: a final chunk whose padded end would
-                    # cross max_seq slides back inside the cache
-                    # (dynamic_update_slice would clamp the write start and
-                    # scramble rows); the re-covered rows recompute to
-                    # identical values.  The paged scatter drops
-                    # out-of-range rows instead, so no slide is needed.
-                    off = min(off, max(0, self.max_seq - C))
-                piece = req.prompt[off:off + C]
-                tokens[slot, :len(piece)] = piece
-                valid[slot] = True
-                offsets[slot] = off
-                true_lens[slot] = len(req.prompt)
-                seeds[slot] = req.seed
-                budgets0[slot] = req.max_new_tokens - 1
-                stops[slot, :len(req.stop_tokens)] = req.stop_tokens
-            first = valid if ci == 0 else np.zeros((ns,), bool)
-            self.state, self.caches, toks = self._admit_chunk(
-                self.params, self.state, self.caches, jnp.asarray(tokens),
-                jnp.asarray(valid), jnp.asarray(first), jnp.asarray(offsets),
-                jnp.asarray(true_lens), jnp.asarray(seeds),
-                jnp.asarray(budgets0), jnp.asarray(stops),
-                jnp.asarray(admitting), jnp.asarray(shared),
-                jnp.asarray(n_shared), jnp.asarray(new_pages),
-                jnp.asarray(cow_src), jnp.asarray(ev_arr),
-                jnp.asarray(rg_arr))
-            self.n_admit_calls += 1
-            for slot, req in admitted:
-                if ci == n_chunks[slot] - 1:
-                    finals[slot] = toks
+                                               self.sched.pool.pages_shared)
+        self.prefill_chunks_skipped += rnd.chunks_skipped
+        st, ca = self._admit_side()
+        st, ca, finals, n_calls = self.prefill.run_round(self.params, st,
+                                                         ca, rnd)
+        self._set_admit_side(st, ca)
+        self.n_admit_calls += n_calls
         # one blocking sync for the whole admission round
-        active = np.asarray(self.state.active)
+        active = np.asarray(st.active)
         now = time.perf_counter()
-        for slot, req in admitted:
+        for slot, req in rnd.admitted:
             tok = int(np.asarray(finals[slot])[slot])
             req.out_tokens.append(tok)
             req.t_first = now
             self.n_generated += 1
             if not active[slot]:
-                self._release_slot(slot)
+                # terminated at admission (first-token EOS / no decode
+                # room): the compiled admit already released its device
+                # refs; retire it on the admission side — it never
+                # transfers
+                self.sched.release_admit_slot(slot)
+            elif self.disagg:
+                self.sched.mark_ready(slot)
         self.n_syncs += 1
         if self.check_invariants and paged:
             self._verify_invariants()
 
-    def _release_slot(self, slot: int) -> None:
-        """Host-side retirement: mark the request done, free the slot and
-        replay the device-side refcount release in the HostPool mirror."""
-        req = self.slot_req[slot]
-        self.slot_req[slot] = None
-        if self.pool is not None:
-            self.pool.release_slot(slot)
-        self._finish(req)
-
-    def _finish(self, req: Request) -> None:
-        """Seal a completed request: classify the finish reason (highest
-        precedence first), build the structured RequestResult and fold the
-        request's speculation counters into the engine totals."""
-        req.done = True
-        out = req.out_tokens
-        if req.aborted:
-            reason = "aborted"
-        elif out and out[-1] in req.stop_tokens:
-            reason = "eos"
-        elif req.clamped and len(out) >= req.max_new_tokens:
-            # the budget was clamped at submit, so exhausting it means the
-            # stream ran into the cache ceiling, not the caller's ask
-            reason = "max_seq"
-        elif len(out) >= req.max_new_tokens:
-            reason = "budget"
-        else:
-            reason = "max_seq"
-        self.tokens_drafted += req.drafted_tokens
-        self.tokens_accepted += req.accepted_tokens
-        req.result = RequestResult(
-            uid=req.uid, tokens=tuple(out), finish_reason=reason,
-            prefill_tokens=req.prefill_tokens,
-            drafted_tokens=req.drafted_tokens,
-            accepted_tokens=req.accepted_tokens,
-            pages_shared=req.pages_shared,
-            ttft=(req.t_first - req.t_submit) if req.t_first else None)
-        self._finished.append(req.result)
+    def _transfer(self) -> None:
+        """Disagg: move every transferable prefilled request's pages
+        into the decode pool (FIFO, backpressured by the scheduler)."""
+        plans = self.sched.plan_transfers()
+        if not plans:
+            return
+        mp = self.pages_per_slot
+        checked = [] if self.check_invariants else None
+        for t in plans:
+            src = np.zeros((mp,), np.int32)
+            src[:t.n] = t.src_ids
+            dst = np.zeros((mp,), np.int32)
+            dst[:t.n] = t.dst_ids
+            self.p_state, tiles, scalars = self.prefill.export_request(
+                self.p_state, self.p_caches, jnp.asarray(src), t.src_slot)
+            self.state, self.caches = self.decode.import_request(
+                self.state, self.caches, tiles, scalars, jnp.asarray(dst),
+                t.n, t.dst_slot)
+            self.pages_transferred += t.n
+            if checked is not None:
+                checked.append((t, tiles))
+        self.transfer_rounds += 1
+        self.pages_high_water = max(self.pages_high_water,
+                                    self.sched.decode_pool.pages_in_use)
+        if self.check_invariants:
+            self._verify_invariants()
+            for t, tiles in checked:
+                self._verify_transfer(t, tiles)
 
     # ------------------------------------------------------------------
     # telemetry / debug
@@ -967,8 +551,10 @@ class Engine:
 
     @property
     def pages_in_use(self) -> int:
-        """Pages with refcount > 0 — slot-held and cache-held alike."""
-        return self.pool.pages_in_use if self.pool is not None else 0
+        """Decode-pool pages with refcount > 0 — slot-held and
+        cache-held alike."""
+        pool = self.sched.decode_pool
+        return pool.pages_in_use if pool is not None else 0
 
     def prefix_stats(self) -> dict:
         """Prefix-cache telemetry for reports and benches."""
@@ -989,10 +575,10 @@ class Engine:
         | "model", None when speculation is off) and drafted/accepted
         totals over retired requests plus the live slots' in-flight
         counters.  `abort()` retires a running request through the same
-        `_finish` path as normal completion, so its in-flight split folds
+        finish path as normal completion, so its in-flight split folds
         into the totals rather than vanishing."""
         drafted, accepted = self.tokens_drafted, self.tokens_accepted
-        for r in self.slot_req:
+        for r in self.sched.decode_slot_req:
             if r is not None:
                 drafted += r.drafted_tokens
                 accepted += r.accepted_tokens
@@ -1002,55 +588,119 @@ class Engine:
                 "drafted": drafted, "accepted": accepted,
                 "acceptance_rate": accepted / drafted if drafted else 0.0}
 
-    def _verify_invariants(self) -> None:
-        """Debug-mode cross-check (`check_invariants=True`): the HostPool
-        mirror must equal the device allocator exactly — refcounts, free
-        popcount, per-slot block tables and ownership — and the global
-        refcount identity (I3 in `repro.runtime.pages`) must hold."""
-        pool = self.state.pages
-        refs = np.asarray(pool.refs)
+    def disagg_stats(self) -> dict:
+        """Disaggregation telemetry: the transfer volume and both pools'
+        high-water occupancy (all zeros on a colocated engine)."""
+        return {"enabled": self.disagg,
+                "pages_transferred": self.pages_transferred,
+                "transfer_rounds": self.transfer_rounds,
+                "transfers_backpressured":
+                    self.sched.transfers_backpressured,
+                "decode_pages_high_water": self.pages_high_water,
+                "decode_pages": self.num_pages,
+                "prefill_pages_high_water": self.prefill_pages_high_water,
+                "prefill_pages": self.prefill_pages if self.disagg else 0,
+                "prefill_slots": self.prefill_slots if self.disagg else 0}
+
+    def _verify_pool(self, host: pg.HostPool, dev: pg.PagePool,
+                     num_slots: int, cached: int, label: str) -> None:
+        """One pool's mirror-vs-device cross-check: refcounts, free
+        popcount, per-slot block tables/ownership, and the I3 identity."""
+        refs = np.asarray(dev.refs)
         if (refs < 0).any():
-            raise AssertionError(f"device refcounts negative: {refs}")
-        if not np.array_equal(refs, self.pool.refs):
+            raise AssertionError(f"[{label}] device refcounts negative: "
+                                 f"{refs}")
+        if not np.array_equal(refs, host.refs):
             raise AssertionError(
-                f"host/device refcount drift:\n host {self.pool.refs}\n "
-                f"device {refs}")
-        if int((refs == 0).sum()) != self.pool.free_pages:
+                f"[{label}] host/device refcount drift:\n host "
+                f"{host.refs}\n device {refs}")
+        if int((refs == 0).sum()) != host.free_pages:
             raise AssertionError(
-                f"free popcount drift: host {self.pool.free_pages}, "
+                f"[{label}] free popcount drift: host {host.free_pages}, "
                 f"device {int((refs == 0).sum())}")
-        n_pages = np.asarray(pool.n_pages)
-        tables = np.asarray(pool.tables)
-        owned = np.asarray(pool.owned)
-        for s in range(self.num_slots):
-            t = self.pool.slot_tables[s]
+        n_pages = np.asarray(dev.n_pages)
+        tables = np.asarray(dev.tables)
+        owned = np.asarray(dev.owned)
+        for s in range(num_slots):
+            t = host.slot_tables[s]
             if int(n_pages[s]) != len(t):
                 raise AssertionError(
-                    f"slot {s} n_pages drift: host {len(t)}, "
+                    f"[{label}] slot {s} n_pages drift: host {len(t)}, "
                     f"device {int(n_pages[s])}")
             if list(tables[s, :len(t)]) != t:
                 raise AssertionError(
-                    f"slot {s} table drift: host {t}, "
+                    f"[{label}] slot {s} table drift: host {t}, "
                     f"device {list(tables[s, :len(t)])}")
-            if list(owned[s, :len(t)]) != self.pool.slot_owned[s]:
+            if list(owned[s, :len(t)]) != host.slot_owned[s]:
                 raise AssertionError(
-                    f"slot {s} ownership drift: host "
-                    f"{self.pool.slot_owned[s]}, "
+                    f"[{label}] slot {s} ownership drift: host "
+                    f"{host.slot_owned[s]}, "
                     f"device {list(owned[s, :len(t)])}")
-        cached = self.prefix.cached_pages if self.prefix is not None else 0
         if int(n_pages.sum()) != int(refs.sum()) - cached:
             raise AssertionError(
-                f"refcount identity broken: sum(n_pages)="
+                f"[{label}] refcount identity broken: sum(n_pages)="
                 f"{int(n_pages.sum())}, sum(refs)={int(refs.sum())}, "
                 f"cached={cached}")
 
+    def _verify_invariants(self) -> None:
+        """Debug-mode cross-check (`check_invariants=True`): every
+        HostPool mirror must equal its device allocator exactly —
+        refcounts, free popcount, per-slot block tables and ownership —
+        and the global refcount identity (I3 in `repro.runtime.pages`)
+        must hold.  Under disagg BOTH pools are checked (I7: each side
+        independently satisfies I1–I6 after every transfer round)."""
+        if self.kv_layout != "paged":
+            return
+        if self.disagg:
+            self._verify_pool(self.sched.pool, self.p_state.pages,
+                              self.prefill_slots, 0, "prefill")
+            self._verify_pool(self.sched.decode_pool, self.state.pages,
+                              self.num_slots, 0, "decode")
+        else:
+            cached = self.prefix.cached_pages \
+                if self.prefix is not None else 0
+            self._verify_pool(self.sched.pool, self.state.pages,
+                              self.num_slots, cached, "pool")
+
+    def _verify_transfer(self, t, tiles) -> None:
+        """I7 content check: the imported pages' rows must read back
+        bit-identical to the exported tiles."""
+        mp = self.pages_per_slot
+        dst = np.zeros((mp,), np.int32)
+        dst[:t.n] = t.dst_ids
+        got = pg.export_pages(self.caches, self._pool_flags,
+                              jnp.asarray(dst))
+        for a, b in zip(jax.tree_util.tree_leaves(tiles),
+                        jax.tree_util.tree_leaves(got)):
+            a = np.asarray(a)[:, :t.n]
+            b = np.asarray(b)[:, :t.n]
+            if not np.array_equal(a, b):
+                raise AssertionError(
+                    f"I7 broken: transferred pages for request "
+                    f"{t.req.uid} differ between pools")
+
     # ------------------------------------------------------------------
     def step(self) -> bool:
-        """One engine tick: admit queued prompts, then `decode_steps`
-        fused decode steps for all active slots (a single jit call and a
+        """One engine tick: admit queued prompts (disagg: after moving
+        transferable prefilled requests into the decode pool, freeing
+        prefill slots for this round), then `decode_steps` fused decode
+        steps for all active decode slots (a single jit call and a
         single host sync)."""
+        if self.disagg:
+            self._transfer()
         self._admit()
-        if not any(r is not None for r in self.slot_req):
+        if self.disagg:
+            # freshly prefilled prompts move the same step, so their
+            # first decode tick lands exactly when the colocated
+            # engine's would
+            self._transfer()
+        if not any(r is not None for r in self.sched.decode_slot_req):
+            if self.disagg:
+                # prefill-side work (queued, mid-prefill or awaiting
+                # transfer) still counts as engine progress
+                return bool(self.sched.queue or self.sched.ready
+                            or any(r is not None
+                                   for r in self.sched.slot_req))
             return False
         # KV bytes this tick's decode steps read (tick-start lengths; the
         # kernel touches live pages only, the gather oracle — dense decode
@@ -1059,12 +709,13 @@ class Engine:
         if self.decode_kernel:
             rows = pk_kernel.decode_read_rows(
                 [len(r.prompt) + len(r.out_tokens)
-                 for r in self.slot_req if r is not None], self.page_size)
+                 for r in self.sched.decode_slot_req if r is not None],
+                self.page_size)
         else:
             rows = pk_kernel.oracle_read_rows(self.num_slots, self.max_seq)
         self.kv_bytes_read += self.decode_steps * rows * self._kv_row_bytes
         self.kv_read_steps += self.decode_steps
-        self.state, self.caches, toks, emitted = self._tick(
+        self.state, self.caches, toks, emitted = self.decode.tick(
             self.params, self.state, self.caches)
         # non-spec tick: (steps, slots); spec tick: (steps, slots, window)
         # — normalize to a trailing window axis of 1
@@ -1078,7 +729,7 @@ class Engine:
             n_ac = np.asarray(self.state.n_accepted)
         self.n_ticks += 1
         self.n_syncs += 1
-        for slot, req in enumerate(self.slot_req):
+        for slot, req in enumerate(self.sched.decode_slot_req):
             if req is None:
                 continue
             for t in range(toks.shape[0]):
@@ -1090,7 +741,7 @@ class Engine:
                 req.drafted_tokens = int(n_dr[slot])
                 req.accepted_tokens = int(n_ac[slot])
             if not active[slot]:
-                self._release_slot(slot)
+                self.sched.release_decode_slot(slot)
         if self.check_invariants and self.kv_layout == "paged":
             self._verify_invariants()
         return True
@@ -1099,26 +750,38 @@ class Engine:
         """Serve until the queue drains (or max_ticks), returning the
         RequestResults completed during this call, completion order."""
         for _ in range(max_ticks):
-            if not self.step() and not self._queue:
+            if not self.step() and not self.sched.queue:
                 break
-        done, self._finished = self._finished, []
+        done, self.sched.finished = self.sched.finished, []
         return done
 
     def abort(self, req: Request) -> bool:
         """Cancel a request.  Queued: removed before it ever runs.
         Running: its slot is deactivated and (paged) its page references
         released immediately — the freed pages are grantable in the very
-        next admission round.  Returns False if the request had already
-        finished.  Either way an aborted request keeps the tokens it
-        emitted, with finish_reason \"aborted\"."""
+        next admission round.  Disagg: a prefilled request awaiting
+        transfer is dropped on the prefill side and never moves.
+        Returns False if the request had already finished.  Either way
+        an aborted request keeps the tokens it emitted, with
+        finish_reason "aborted"."""
         if req.done:
             return False
         req.aborted = True
-        if req in self._queue:
-            self._queue.remove(req)
-            self._finish(req)
+        if req in self.sched.queue:
+            self.sched.queue.remove(req)
+            self.sched.finish(req)
             return True
-        for slot, r in enumerate(self.slot_req):
+        if self.disagg and req.uid in self.sched._ready_slot:
+            slot = self.sched.drop_ready(req)
+            dead = jnp.zeros((self.prefill_slots,), bool).at[slot].set(True)
+            self.p_state = self.p_state._replace(
+                active=self.p_state.active & ~dead,
+                pages=pg.release(self.p_state.pages, dead))
+            self.sched.release_admit_slot(slot)
+            if self.check_invariants:
+                self._verify_invariants()
+            return True
+        for slot, r in enumerate(self.sched.decode_slot_req):
             if r is req:
                 dead = jnp.zeros((self.num_slots,), bool).at[slot].set(True)
                 state = self.state._replace(active=self.state.active & ~dead)
@@ -1126,7 +789,7 @@ class Engine:
                     state = state._replace(pages=pg.release(state.pages,
                                                             dead))
                 self.state = state
-                self._release_slot(slot)
+                self.sched.release_decode_slot(slot)
                 if self.check_invariants and self.kv_layout == "paged":
                     self._verify_invariants()
                 return True
@@ -1134,9 +797,11 @@ class Engine:
         raise AssertionError(f"request {req.uid} is in no engine structure")
 
     def close(self) -> None:
-        """Release the engine's sharding context (the activate() in __init__
-        is process-global; a later meshless Engine or trainer in the same
-        process would otherwise trace against this engine's serve rules)."""
+        """Release the engine's sharding context (the activate() in
+        __init__ is process-global; a later meshless Engine or trainer in
+        the same process would otherwise trace against this engine's
+        serve rules).  Idempotent, and safe on a partially constructed
+        engine — __init__ calls it before re-raising."""
         if self._ctx is not None and shd.active() is self._ctx:
             shd.deactivate()
         self._ctx = None

@@ -1,0 +1,220 @@
+"""Disaggregated prefill/decode serving (runtime/scheduler.py +
+runtime/workers.py + runtime/serve.py).
+
+The contract under test: splitting the engine into a prefill worker (its
+own slot set and page pool) and a decode worker, with finished prompts'
+KV pages handed off at page granularity (pages.export_pages ->
+import_pages + adopt), must change NOTHING about the emitted streams.
+Greedy streams are bit-identical disagg vs colocated for every
+pool-representable cache architecture (gqa, mla, int8-KV), under
+staggered admissions.  Every engine here runs with
+`check_invariants=True`, so each assertion also re-proves I1-I6 on BOTH
+HostPool mirrors after every transfer round plus the I7 content check
+(re-exporting the destination pages and comparing them bit-for-bit
+against the tiles that were moved).
+
+Also covered: decode-pool pressure during transfer (a dry decode pool
+must backpressure the handoff, never leak a refcount), the
+configuration validation surface (dense / recurrent / mesh / remote
+roles), and abort of a prompt that finished prefill but never
+transferred."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.runtime.serve import Engine
+
+jax.config.update("jax_platform_name", "cpu")
+
+# every arch whose cache is fully pool-representable (recurrent-hybrid
+# state has no page representation — covered by the validation test)
+ARCHS = {
+    "gqa": ("granite-8b", {}),
+    "mla": ("minicpm3-4b", {}),
+    "int8kv": ("granite-8b", {"quant_kv": True}),
+}
+
+
+def _setup(name):
+    arch, over = ARCHS[name]
+    cfg = get_config(arch, smoke=True)
+    if over:
+        cfg = cfg.replace(**over)
+    return cfg, M.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _serve_staggered(cfg, params, prompts, news, **kw):
+    """First two requests admitted, a few ticks run, then the rest
+    arrive mid-flight — so transfers interleave with live decode and
+    later admissions land while earlier requests still hold pages."""
+    with Engine(cfg, params, num_slots=2, max_seq=64, kv_layout="paged",
+                prefix_cache=False, check_invariants=True, **kw) as eng:
+        reqs = [eng.submit(p, n) for p, n in zip(prompts[:2], news[:2])]
+        eng.step()
+        eng.step()
+        reqs += [eng.submit(p, n)
+                 for p, n in zip(prompts[2:], news[2:])]
+        eng.run()
+        assert all(r.done for r in reqs)
+        # both pools fully drained: no slot holds a reference and (with
+        # the prefix cache off) no page is retained on either side
+        assert eng.pages_in_use == 0
+        assert eng.sched.pool.pages_in_use == 0
+        stats = eng.disagg_stats()
+        return [r.out_tokens for r in reqs], stats
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_disagg_greedy_parity_staggered(name):
+    """Greedy streams bit-identical disagg vs colocated on every
+    pool-representable cache architecture, with requests arriving in
+    waves; the handoff actually ran (pages moved through the decode
+    pool) and both mirrors passed I1-I7 after every transfer round."""
+    cfg, params = _setup(name)
+    rng = np.random.default_rng(0)
+    lens = (3, 17, 29, 9, 40)
+    news = (5, 7, 4, 6, 3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n) for n in lens]
+    colo, cs = _serve_staggered(cfg, params, prompts, news)
+    disagg, ds = _serve_staggered(cfg, params, prompts, news, disagg=True)
+    assert colo == disagg
+    assert not cs["enabled"] and ds["enabled"]
+    assert ds["pages_transferred"] >= len(prompts)   # >= 1 page each
+    assert ds["transfer_rounds"] >= 1
+    assert 0 < ds["decode_pages_high_water"] <= ds["decode_pages"]
+    assert 0 < ds["prefill_pages_high_water"] <= ds["prefill_pages"]
+
+
+def test_decode_pool_pressure_backpressures_transfer():
+    """A decode pool too small for two in-flight requests: the second
+    finished prompt must WAIT in the ready queue (transfer
+    backpressured, counted), then move once the first request's pages
+    free up — everything completes, streams match colocated, and
+    neither pool leaks a single refcount."""
+    cfg, params = _setup("gqa")
+    rng = np.random.default_rng(1)
+    # 40-token prompts + 10 new tokens -> 50 rows -> 4 pages each with
+    # the 16-row page; decode pool of 5 fits only one request at a time
+    prompts = [rng.integers(0, cfg.vocab_size, size=40) for _ in range(3)]
+    news = (10, 10, 10)
+    kw = dict(num_slots=2, max_seq=64, kv_layout="paged",
+              prefix_cache=False, check_invariants=True)
+    with Engine(cfg, params, num_pages=5, disagg=True,
+                prefill_pages=8, **kw) as eng:
+        reqs = [eng.submit(p, n) for p, n in zip(prompts, news)]
+        eng.run()
+        assert all(r.done for r in reqs)
+        stats = eng.disagg_stats()
+        assert stats["transfers_backpressured"] > 0
+        assert stats["decode_pages_high_water"] <= 5
+        assert eng.pages_in_use == 0                 # decode pool drained
+        assert eng.sched.pool.pages_in_use == 0      # prefill pool drained
+        assert eng.pool.slot_refs_total == 0
+        streams = [r.out_tokens for r in reqs]
+    with Engine(cfg, params, **kw) as eng:
+        reqs = [eng.submit(p, n) for p, n in zip(prompts, news)]
+        eng.run()
+        assert streams == [r.out_tokens for r in reqs]
+
+
+def test_abort_before_transfer_releases_prefill_pages():
+    """Aborting a request that finished prefill but has not yet been
+    handed to the decode pool must release its prefill pages and report
+    finish_reason='aborted' — no transfer, no leak."""
+    cfg, params = _setup("gqa")
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=40) for _ in range(2)]
+    with Engine(cfg, params, num_slots=1, max_seq=64, kv_layout="paged",
+                num_pages=4, prefill_pages=8, prefill_slots=2,
+                disagg=True, prefix_cache=False,
+                check_invariants=True) as eng:
+        r0 = eng.submit(prompts[0], 10)
+        r1 = eng.submit(prompts[1], 10)
+        # one step: both prompts prefill (2 prefill slots) but only r0
+        # fits the single decode slot; r1 sits in the ready queue
+        eng.step()
+        assert eng.sched.ready and eng.sched.ready[0].uid == r1.uid
+        assert eng.abort(r1)
+        assert not eng.sched.ready
+        eng.run()
+        assert r0.done and r1.done
+        assert r1.result.finish_reason == "aborted"
+        assert eng.pages_in_use == 0
+        assert eng.sched.pool.pages_in_use == 0
+
+
+def test_disagg_validation_surface():
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="kv_layout"):
+        Engine(cfg, params, num_slots=2, max_seq=64, kv_layout="dense",
+               disagg=True)
+    with pytest.raises(NotImplementedError, match="multi-process"):
+        Engine(cfg, params, num_slots=2, max_seq=64, kv_layout="paged",
+               disagg=True, role="prefill")
+    with pytest.raises(NotImplementedError, match="multi-process"):
+        Engine(cfg, params, num_slots=2, max_seq=64, kv_layout="paged",
+               disagg=True, role="decode")
+    with pytest.raises(ValueError, match="mesh"):
+        Engine(cfg, params, num_slots=2, max_seq=64, kv_layout="paged",
+               disagg=True, mesh="model=1")
+    rcfg = get_config("jamba-1.5-large-398b", smoke=True)
+    rparams = M.init_params(rcfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="page representation"):
+        Engine(rcfg, rparams, num_slots=2, max_seq=64, kv_layout="paged",
+               disagg=True)
+
+
+def test_disagg_disables_prefix_and_speculation():
+    """Prefix caching and speculation opt out silently under disagg (no
+    page representation for drafter state; cached prefixes live in the
+    prefill pool which the decode worker cannot see)."""
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with Engine(cfg, params, num_slots=2, max_seq=64, kv_layout="paged",
+                disagg=True, draft_len=3, drafter="ngram") as eng:
+        assert eng.prefix is None
+        assert eng.draft_len == 0
+        r = eng.submit(np.arange(1, 9), 5)
+        eng.run()
+        assert r.done and len(r.out_tokens) == 5
+
+
+# --- construction failure / close() regression ------------------------------
+
+def test_close_is_idempotent():
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, num_slots=1, max_seq=32)
+    eng.close()
+    eng.close()                                      # second close: no-op
+
+
+def test_failed_construction_releases_sharding_ctx():
+    """An Engine whose __init__ raises partway must leave no
+    process-global sharding context active — whether the failure lands
+    BEFORE the mesh context is entered (invalid mesh spec) or AFTER
+    (drafter validation) — and a subsequent Engine must work."""
+    from repro.parallel import sharding as shd
+
+    cfg = get_config("granite-8b", smoke=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    # (a) mesh build fails before activation: 3-way model parallelism
+    # cannot be laid out on a single CPU device
+    with pytest.raises(ValueError):
+        Engine(cfg, params, num_slots=1, max_seq=32, mesh="model=3")
+    assert shd.active() is None
+    # (b) failure AFTER the sharding ctx is active: the smoke config has
+    # 2 layers, so draft_layers=3 fails QuantDrafter validation deep in
+    # _build — close() in the except path must release the ctx
+    with pytest.raises(ValueError, match="draft_layers"):
+        Engine(cfg, params, num_slots=1, max_seq=32, mesh="model=1",
+               draft_len=3, drafter="model", draft_layers=3)
+    assert shd.active() is None
+    # the process is not poisoned: a fresh engine still serves
+    with Engine(cfg, params, num_slots=1, max_seq=32) as eng:
+        r = eng.submit([1, 2, 3], 4)
+        eng.run()
+        assert r.done and len(r.out_tokens) == 4
